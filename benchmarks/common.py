@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, Iterable, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def write_csv(name: str, rows: List[Dict], field_order: Iterable[str]):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(field_order))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)                     # warmup / compile
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out

@@ -1,0 +1,67 @@
+"""Roofline table: aggregate the dry-run artifacts into the EXPERIMENTS.md
+§Roofline table (single-pod baselines; multi-pod rows prove the pod axis)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART_DIR, write_csv
+
+DRY_DIR = os.path.join(ART_DIR, "dryrun")
+
+FIELDS = ["arch", "shape", "mesh", "kind", "peak_GB", "tpu_peak_GB", "fits",
+          "compute_s", "memory_s", "collective_s", "dominant",
+          "useful_flops_ratio", "roofline_fraction"]
+
+
+def rows_from_artifacts(tag: str = "") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if (tag and not base.endswith("__" + tag)) or \
+                (not tag and len(parts) != 3):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("skipped") or "roofline" not in d:
+            continue               # solver-round artifacts use another schema
+        r = d["roofline"]
+        m = d["memory"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "kind": d["kind"],
+            "peak_GB": round(m["peak_bytes"] / 2 ** 30, 2),
+            "tpu_peak_GB": round(
+                m.get("peak_bytes_tpu_modeled", m["peak_bytes"]) / 2 ** 30,
+                2),
+            "fits": m["fits_16GB"],
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "dominant": r["dominant"].replace("_s", ""),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = rows_from_artifacts()
+    if not rows:
+        print("roofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return
+    path = write_csv("roofline_table.csv", rows, FIELDS)
+    for r in rows:
+        print("roofline,%s,%s,%s,%s,%s,%s,%s,%s" % (
+            r["arch"], r["shape"], r["mesh"], r["dominant"],
+            r["compute_s"], r["memory_s"], r["collective_s"],
+            r["roofline_fraction"]))
+    print(f"roofline -> {path}")
+
+
+if __name__ == "__main__":
+    main()

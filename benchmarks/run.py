@@ -1,0 +1,46 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  table1  — PARALLEL-VERTEX-COVER scaling (paper Table I)
+  table2  — PARALLEL-DOMINATING-SET scaling (paper Table II)
+  fig10   — T_S/T_R steal-traffic gap growth (paper Fig. 10)
+  kernels — Pallas kernel micro (shapes, ref timings, interpret deltas)
+  roofline— aggregated dry-run roofline table (EXPERIMENTS.md §Roofline)
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+CSV artifacts land in benchmarks/artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (fig10_steal_traffic, kernel_micro, roofline_table,
+                        table1_vertex_cover, table2_dominating_set)
+
+SUITES = [
+    ("table1", table1_vertex_cover.main),
+    ("table2", table2_dominating_set.main),
+    ("fig10", fig10_steal_traffic.main),
+    ("kernels", kernel_micro.main),
+    ("roofline", roofline_table.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced worker counts / shapes")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    for name, fn in SUITES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        fn(quick=args.quick)
+        print(f"== {name} done in {time.time()-t0:.1f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

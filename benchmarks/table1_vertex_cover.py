@@ -1,0 +1,91 @@
+"""Table I analogue: PARALLEL-VERTEX-COVER scaling.
+
+Two measurements per (instance, core count):
+
+1. *Paper-faithful protocol* — ParallelRBSimulator (PARALLEL-RB, Fig. 7
+   verbatim: GETPARENT topology, GETHEAVIESTTASKINDEX responses, passes>2
+   termination).  Makespan is in *ticks* (one node visit per active core
+   per tick) — the machine-independent time unit; T_S / T_R per core match
+   the paper's table semantics.
+
+2. *BSP/JAX engine* — repro.core.distributed.solve with W lanes; the
+   makespan analogue is engine rounds x R + steal phases.  Optima are
+   asserted equal to SERIAL-RB.
+
+Instances are scaled-down analogues of the paper's set (CPU container):
+a p_hat-style random graph, a 4-regular 60-cell-style graph (regularity
+defeats pruning — the paper's hard case), and a denser frb-style graph.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import write_csv
+from repro.core.distributed import solve
+from repro.core.serial import ParallelRBSimulator, serial_rb
+from repro.problems import (gnp_graph, make_vertex_cover,
+                            make_vertex_cover_py, random_regularish_graph)
+
+CORES = [1, 2, 4, 8, 16, 32]
+LANES = [1, 4, 16, 64]
+
+INSTANCES = [
+    ("p_hat-an", lambda: gnp_graph(36, 0.14, seed=7)),
+    ("60cell-an", lambda: random_regularish_graph(44, 4, seed=1)),
+    ("frb-an", lambda: gnp_graph(30, 0.25, seed=3)),
+]
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    cores = CORES[:4] if quick else CORES
+    lanes = LANES[:3] if quick else LANES
+    for name, gf in INSTANCES:
+        g = gf()
+        prob_py = make_vertex_cover_py(g)
+        serial_best, serial_nodes, _ = serial_rb(prob_py)
+        base_ticks = None
+        for c in cores:
+            sim = ParallelRBSimulator(make_vertex_cover_py(g), c=c).run()
+            assert sim.best == serial_best, (name, c)
+            if base_ticks is None:
+                base_ticks = sim.makespan
+            rows.append({
+                "instance": name, "impl": "parallel-rb-sim", "workers": c,
+                "makespan": sim.makespan, "nodes": sim.total_nodes,
+                "t_s": round(sim.avg_t_s, 1), "t_r": round(sim.avg_t_r, 1),
+                "speedup": round(base_ticks / sim.makespan, 2),
+            })
+        prob = make_vertex_cover(g)
+        base_rounds = None
+        for w in lanes:
+            _, stats, _ = solve(prob, num_lanes=w, steps_per_round=64,
+                                bootstrap_rounds=3, bootstrap_steps=8)
+            assert stats.best == serial_best, (name, w)
+            if base_rounds is None:
+                base_rounds = stats.rounds
+            rows.append({
+                "instance": name, "impl": "bsp-engine", "workers": w,
+                "makespan": stats.rounds, "nodes": stats.nodes,
+                "t_s": round(stats.t_s / w, 1),
+                "t_r": round(stats.t_r / w, 1),
+                "speedup": round(base_rounds / max(stats.rounds, 1), 2),
+            })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    path = write_csv("table1_vertex_cover.csv", rows,
+                     ["instance", "impl", "workers", "makespan", "nodes",
+                      "t_s", "t_r", "speedup"])
+    for r in rows:
+        print("table1,%s,%s,%s,%s,%s,%s,%s" % (
+            r["instance"], r["impl"], r["workers"], r["makespan"],
+            r["nodes"], r["t_s"], r["t_r"]))
+    print(f"table1 -> {path}")
+
+
+if __name__ == "__main__":
+    main()

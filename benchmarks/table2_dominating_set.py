@@ -1,0 +1,68 @@
+"""Table II analogue: PARALLEL-DOMINATING-SET scaling (same methodology as
+table1; DS instances are nxm.ds-style random graphs)."""
+
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.core.distributed import solve
+from repro.core.serial import ParallelRBSimulator, serial_rb
+from repro.problems import (gnp_graph, make_dominating_set,
+                            make_dominating_set_py)
+
+CORES = [1, 2, 4, 8, 16, 32]
+LANES = [1, 4, 16]
+
+INSTANCES = [
+    ("26x90.ds", lambda: gnp_graph(26, 0.27, seed=11)),
+    ("30x60.ds", lambda: gnp_graph(30, 0.14, seed=5)),
+]
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    cores = CORES[:4] if quick else CORES
+    for name, gf in INSTANCES:
+        g = gf()
+        serial_best, serial_nodes, _ = serial_rb(make_dominating_set_py(g))
+        base = None
+        for c in cores:
+            sim = ParallelRBSimulator(make_dominating_set_py(g), c=c).run()
+            assert sim.best == serial_best, (name, c)
+            base = base or sim.makespan
+            rows.append({
+                "instance": name, "impl": "parallel-rb-sim", "workers": c,
+                "makespan": sim.makespan, "nodes": sim.total_nodes,
+                "t_s": round(sim.avg_t_s, 1), "t_r": round(sim.avg_t_r, 1),
+                "speedup": round(base / sim.makespan, 2),
+            })
+        prob = make_dominating_set(g)
+        base_r = None
+        for w in (LANES[:2] if quick else LANES):
+            _, stats, _ = solve(prob, num_lanes=w, steps_per_round=64,
+                                bootstrap_rounds=3, bootstrap_steps=8)
+            assert stats.best == serial_best, (name, w)
+            base_r = base_r or stats.rounds
+            rows.append({
+                "instance": name, "impl": "bsp-engine", "workers": w,
+                "makespan": stats.rounds, "nodes": stats.nodes,
+                "t_s": round(stats.t_s / w, 1),
+                "t_r": round(stats.t_r / w, 1),
+                "speedup": round(base_r / max(stats.rounds, 1), 2),
+            })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    path = write_csv("table2_dominating_set.csv", rows,
+                     ["instance", "impl", "workers", "makespan", "nodes",
+                      "t_s", "t_r", "speedup"])
+    for r in rows:
+        print("table2,%s,%s,%s,%s,%s,%s,%s" % (
+            r["instance"], r["impl"], r["workers"], r["makespan"],
+            r["nodes"], r["t_s"], r["t_r"]))
+    print(f"table2 -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""The paper's technique applied OUTSIDE graph problems: exact best-path
+decoding over an LM's pruned token lattice as indexed-search-tree
+backtracking.
+
+Problem: find the exact highest-likelihood continuation of length D when
+each step may choose one of the TOP-2 tokens (a binary search tree, depth
+D).  Greedy decoding is the leftmost leaf; the optimum may differ (the
+classic beam-search-vs-greedy gap).  The solver enumerates the lattice
+with branch-and-bound: bound = achieved logprob + optimistic per-step
+best, tasks are current_idx prefixes, lanes steal heaviest subtrees —
+exactly the PARALLEL-RB machinery, problem-oblivious as promised (§I).
+
+  PYTHONPATH=src python examples/guided_decode.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import BinaryProblem
+from repro.core.distributed import solve
+from repro.core.serial import PyProblem, serial_rb
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.models.model import Shardings, make_ctx
+
+CFG = ArchConfig(name="toy-lm", family="dense", n_layers=2, d_model=64,
+                 vocab=64, n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+                 remat="none")
+DEPTH = 8
+PROMPT_LEN = 8
+SCALE = 1000        # logprob -> integer objective (the engine minimizes)
+
+
+def build_lattice(seed: int = 0):
+    """Precompute top-2 token ids + logprobs along every lattice node.
+
+    For a toy depth the lattice is small (2^D leaves share prefixes =>
+    2^(D+1) nodes); we score nodes lazily via memoized full forwards —
+    the demonstration is the search layer, not serving throughput."""
+    params = M.init(CFG, jax.random.PRNGKey(seed))
+    ctx = make_ctx(CFG, "train", Shardings(None), block_q=16, block_k=16)
+    prompt = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                (1, PROMPT_LEN), 0, CFG.vocab)
+
+    @jax.jit
+    def logits_at(tokens):
+        return M.forward(CFG, params, {"tokens": tokens}, ctx)[0, -1]
+
+    memo = {}
+
+    def expand(prefix):
+        """prefix: tuple of chosen token ids -> (top2 ids, logprobs)."""
+        if prefix in memo:
+            return memo[prefix]
+        toks = jnp.concatenate(
+            [prompt, jnp.asarray(prefix, jnp.int32)[None]], axis=1) \
+            if prefix else prompt
+        lg = jax.nn.log_softmax(logits_at(toks).astype(jnp.float32))
+        v, i = jax.lax.top_k(lg, 2)
+        out = (np.asarray(i), np.asarray(v))
+        memo[prefix] = out
+        return out
+
+    return expand
+
+
+def make_problem(expand):
+    """State: (depth, prefix tokens, accumulated -logprob)."""
+
+    def root():
+        return (0, (), 0)
+
+    def apply(state, bit):
+        d, prefix, cost = state
+        ids, lps = expand(prefix)
+        tok = int(ids[bit])
+        return (d + 1, prefix + (tok,), cost + int(-lps[bit] * SCALE))
+
+    def leaf_value(state):
+        d, _, cost = state
+        return d == DEPTH, cost
+
+    def lower_bound(state):
+        d, _, cost = state
+        return cost          # admissible: future steps cost >= 0
+
+    return PyProblem(name="guided-decode", max_depth=DEPTH, root=root,
+                     apply=apply, leaf_value=leaf_value,
+                     lower_bound=lower_bound)
+
+
+def main() -> None:
+    expand = build_lattice()
+    prob = make_problem(expand)
+
+    # Greedy = always take the left (top-1) branch.
+    state = prob.root()
+    for _ in range(DEPTH):
+        state = prob.apply(state, 0)
+    greedy_cost = state[2]
+    print(f"greedy continuation: tokens={state[1]} "
+          f"-logprob={greedy_cost/SCALE:.3f}")
+
+    best, nodes, _ = serial_rb(prob)
+    print(f"exact optimum: -logprob={best/SCALE:.3f} "
+          f"(searched {nodes} lattice nodes, greedy gap "
+          f"{(greedy_cost-best)/SCALE:.3f})")
+    assert best <= greedy_cost
+
+    from repro.core.serial import ParallelRBSimulator
+    sim = ParallelRBSimulator(make_problem(expand), c=8).run()
+    assert sim.best == best
+    print(f"PARALLEL-RB x8: same optimum in {sim.makespan} ticks "
+          f"(T_S={sim.avg_t_s:.1f}, T_R={sim.avg_t_r:.1f}) — "
+          "the framework is oblivious to the problem being an LM lattice.")
+
+
+if __name__ == "__main__":
+    main()

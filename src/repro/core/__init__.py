@@ -1,0 +1,19 @@
+"""The paper's contribution: indexed search trees + parallel backtracking.
+
+Public API:
+  BinaryProblem          — problem protocol (jnp, engine form)
+  PyProblem              — problem protocol (scalar oracle form)
+  solve                  — distributed solver driver (single- or multi-device)
+  serial_rb              — SERIAL-RB oracle
+  ParallelRBSimulator    — faithful PARALLEL-RB protocol simulator
+"""
+
+from repro.core.api import (  # noqa: F401
+    DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE, BinaryProblem,
+)
+from repro.core.serial import (  # noqa: F401
+    INF, ParallelRBSimulator, PyProblem, SimResult, get_next_parent,
+    get_parent, serial_rb,
+)
+from repro.core.distributed import SolveStats, solve  # noqa: F401
+from repro.core.engine import Lanes, init_lanes  # noqa: F401

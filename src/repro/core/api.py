@@ -1,0 +1,83 @@
+"""User-facing problem protocol for the parallel recursive backtracking framework.
+
+The paper (Abu-Khzam et al., 2013) requires only that (a) the number of
+children of a search-node can be computed on the fly and (b) child generation
+is deterministic with a well-defined order, so that re-running the serial
+algorithm always yields the identical search tree.  We inherit both
+requirements and strengthen them for XLA: every callback must be jnp-traceable
+with static shapes.
+
+A problem is expressed against a *binary* search tree (the paper's primary
+setting; ``repro.core.indexing`` also implements the arbitrary-branching
+encoding of §IV-C).  Each node either branches into exactly two children
+(``left = bit 0``, ``right = bit 1``) or is a terminal (leaf / pruned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+PyTree = Any
+
+#: Sentinel values used in ``current_idx`` arrays (paper, Fig. 2-4).
+UNVISITED = jnp.int8(-2)   # slot beyond the live path / child not yet taken
+DELEGATED = jnp.int8(-1)   # right sibling at this depth was shipped elsewhere
+LEFT = jnp.int8(0)
+RIGHT = jnp.int8(1)
+
+#: "Infinite" objective for minimization problems (int32-safe).
+INF_VALUE = jnp.int32(2**30)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryProblem:
+    """A minimization problem explored by binary recursive backtracking.
+
+    All callables receive/return jnp values and must be shape-static,
+    deterministic and vmap-safe.  ``state`` is an arbitrary pytree whose
+    leaves have fixed shapes.
+
+    Attributes:
+      name: identifier used in logs/benchmarks.
+      max_depth: static bound D_MAX on the tree depth (root is depth 0; any
+        node satisfies depth <= max_depth).
+      root: () -> state — the root search-node.
+      apply: (state, bit:int32) -> state — descend to the left (0) or right
+        (1) child.  Must be total: called under ``lax.cond``-free vectorized
+        code, it may be invoked on terminal states whose result is discarded.
+      leaf_value: (state) -> (is_solution_leaf: bool, value: int32) — whether
+        this node is a *solution* leaf and its objective value.  Non-solution
+        terminals (infeasible nodes) must return (False, anything).
+      lower_bound: (state) -> int32 — admissible lower bound on the best
+        objective in the subtree rooted here.  The engine prunes when
+        ``lower_bound(state) >= best_so_far`` (we search for strictly better
+        solutions, mirroring IsSolution in the paper).  Terminal/infeasible
+        nodes should return INF_VALUE so that arity becomes 0.
+      solution_payload: (state) -> pytree — the actual solution (e.g. the
+        cover bitset) recorded when a new incumbent is found.
+      payload_zero: () -> pytree — zero-initialized payload of the same
+        structure/shape (used to allocate incumbent buffers).
+    """
+
+    name: str
+    max_depth: int
+    root: Callable[[], PyTree]
+    apply: Callable[[PyTree, jnp.ndarray], PyTree]
+    leaf_value: Callable[[PyTree], tuple]
+    lower_bound: Callable[[PyTree], jnp.ndarray]
+    solution_payload: Callable[[PyTree], PyTree]
+    payload_zero: Callable[[], PyTree]
+
+    def arity(self, state: PyTree, best: jnp.ndarray) -> jnp.ndarray:
+        """Number of children: 0 when leaf or pruned by bound, else 2.
+
+        This composition is what the paper calls HasNextChild + the
+        branch-and-reduce pruning rule: a child is generated only while the
+        node can still beat the incumbent.
+        """
+        is_leaf, _ = self.leaf_value(state)
+        pruned = self.lower_bound(state) >= best
+        return jnp.where(is_leaf | pruned, jnp.int32(0), jnp.int32(2))

@@ -1,0 +1,178 @@
+"""Checkpoint / restart for the solver (paper §VII, made first-class).
+
+The paper observes that under indexed search trees, checkpointing is
+"reasonably straightforward ... by forcing every core to write its
+current_idx to some file".  We implement exactly that, plus the elastic
+half the paper only gestures at (join-leave):
+
+* ``save`` — persist every lane's ``(idx, depth, base, active)`` plus the
+  incumbent to a single ``.npz``.  The *entire* solver state is O(W · D_MAX)
+  int8 — the compact-encoding payoff again; stacks are NOT saved, they are
+  reconstructed by CONVERTINDEX replay on restore.
+
+* ``restore`` — rebuild ``Lanes`` for an arbitrary new lane count W'
+  (elastic shrink/grow).  The first W' active tasks are installed directly;
+  any surplus is returned as a host-side *pending pool* the driver feeds to
+  idle lanes at round boundaries (``repro.core.distributed.solve`` consumes
+  it).  Nothing is ever lost or explored twice: an installed lane resumes
+  from its exact ``current_idx`` (delegation marks intact), and pool entries
+  are unmodified lane images.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import tempfile
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import UNVISITED, INF_VALUE, BinaryProblem
+from repro.core.engine import Lanes, init_lanes, replay_path
+
+
+def save(path: str, lanes: Lanes) -> None:
+    """Atomically persist lane control state + incumbent (not the stacks)."""
+    payload_leaves, payload_def = jax.tree_util.tree_flatten(lanes.best_payload)
+    arrays = {
+        "idx": np.asarray(lanes.idx, dtype=np.int8),
+        "depth": np.asarray(lanes.depth, dtype=np.int32),
+        "base": np.asarray(lanes.base, dtype=np.int32),
+        "active": np.asarray(lanes.active),
+        "best": np.asarray(lanes.best, dtype=np.int32),
+        "nodes": np.asarray(lanes.nodes, dtype=np.int32),
+        "t_s": np.asarray(lanes.t_s, dtype=np.int32),
+        "t_r": np.asarray(lanes.t_r, dtype=np.int32),
+        "donated": np.asarray(lanes.donated, dtype=np.int32),
+        "steps": np.asarray(lanes.steps, dtype=np.int32),
+    }
+    for i, leaf in enumerate(payload_leaves):
+        arrays[f"payload_{i}"] = np.asarray(leaf)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    data = buf.getvalue()
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".ckpt.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)          # atomic on POSIX: no torn checkpoints
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+class PendingTask:
+    """A not-yet-installed lane image (elastic surplus)."""
+
+    __slots__ = ("idx", "depth", "base")
+
+    def __init__(self, idx: np.ndarray, depth: int, base: int):
+        self.idx, self.depth, self.base = idx, depth, base
+
+
+def restore(path: str, problem: BinaryProblem, num_lanes: int
+            ) -> Tuple[Lanes, List[PendingTask]]:
+    """Rebuild Lanes for ``num_lanes`` (elastic) + surplus pending pool."""
+    with np.load(path) as z:
+        idx = z["idx"]
+        depth, base, active = z["depth"], z["base"], z["active"]
+        best = int(z["best"])
+        payload_leaves = []
+        i = 0
+        while f"payload_{i}" in z:
+            payload_leaves.append(z[f"payload_{i}"])
+            i += 1
+        stats = {k: z[k] for k in ("nodes", "t_s", "t_r", "donated")}
+        steps = int(z["steps"])
+
+    lanes = init_lanes(problem, num_lanes, seed_root=False)
+    proto = jax.tree_util.tree_structure(lanes.best_payload)
+    payload = (jax.tree_util.tree_unflatten(
+        proto, [jnp.asarray(l) for l in payload_leaves])
+        if payload_leaves else lanes.best_payload)
+
+    live = [k for k in range(idx.shape[0]) if active[k]]
+    installed, pending = live[:num_lanes], live[num_lanes:]
+
+    il = lanes.idx.shape[1]
+    new_idx = np.full((num_lanes, il), int(UNVISITED), np.int8)
+    new_depth = np.zeros((num_lanes,), np.int32)
+    new_base = np.zeros((num_lanes,), np.int32)
+    new_active = np.zeros((num_lanes,), bool)
+    for j, k in enumerate(installed):
+        w = min(il, idx.shape[1])
+        new_idx[j, :w] = idx[k, :w]
+        new_depth[j], new_base[j], new_active[j] = depth[k], base[k], True
+
+    lanes = lanes._replace(
+        idx=jnp.asarray(new_idx), depth=jnp.asarray(new_depth),
+        base=jnp.asarray(new_base), active=jnp.asarray(new_active),
+        best=jnp.int32(best), best_payload=payload,
+        steps=jnp.int32(steps))
+    lanes = rebuild_stacks(problem, lanes)
+
+    # Aggregate stats are carried on lane 0 so totals survive re-sharding.
+    carry = {k: int(v.sum()) for k, v in stats.items()}
+    lanes = lanes._replace(
+        nodes=lanes.nodes.at[0].add(carry["nodes"]),
+        t_s=lanes.t_s.at[0].add(carry["t_s"]),
+        t_r=lanes.t_r.at[0].add(carry["t_r"]),
+        donated=lanes.donated.at[0].add(carry["donated"]))
+
+    pool = [PendingTask(idx[k].copy(), int(depth[k]), int(base[k]))
+            for k in pending]
+    return lanes, pool
+
+
+def rebuild_stacks(problem: BinaryProblem, lanes: Lanes) -> Lanes:
+    """CONVERTINDEX for every active lane: replay path bits to its node.
+
+    The path to a lane's *current node* is ``idx[0..depth-1]`` with
+    delegation marks flattened to the branch actually taken (DELEGATED means
+    the donor went left).  O(W · D_MAX) applies — paid once per restore.
+    """
+    bits = jnp.where(lanes.idx < 0, jnp.int8(0), lanes.idx)
+    stacks = jax.vmap(
+        lambda b, d, s: replay_path(problem, b, d, s)
+    )(bits, lanes.depth, lanes.stack)
+    keep = lanes.active
+    stack = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(
+            keep.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+        stacks, lanes.stack)
+    return lanes._replace(stack=stack)
+
+
+def install_pending(problem: BinaryProblem, lanes: Lanes,
+                    pool: List[PendingTask]) -> Tuple[Lanes, List[PendingTask]]:
+    """Feed pending pool entries to idle lanes (driver, round boundaries)."""
+    if not pool:
+        return lanes, pool
+    active = np.asarray(lanes.active)
+    idle = [i for i in range(active.shape[0]) if not active[i]]
+    n = min(len(idle), len(pool))
+    if n == 0:
+        return lanes, pool
+    il = lanes.idx.shape[1]
+    idxs = np.asarray(lanes.idx).copy()
+    depth = np.asarray(lanes.depth).copy()
+    base = np.asarray(lanes.base).copy()
+    act = active.copy()
+    t_s = np.asarray(lanes.t_s).copy()
+    for lane, task in zip(idle[:n], pool[:n]):
+        w = min(il, task.idx.shape[0])
+        idxs[lane, :w] = task.idx[:w]
+        depth[lane], base[lane], act[lane] = task.depth, task.base, True
+        t_s[lane] += 1
+    lanes = lanes._replace(
+        idx=jnp.asarray(idxs), depth=jnp.asarray(depth),
+        base=jnp.asarray(base), active=jnp.asarray(act),
+        t_s=jnp.asarray(t_s))
+    return rebuild_stacks(problem, lanes), pool[n:]

@@ -1,0 +1,319 @@
+"""Distributed solve: shard_map steal rounds across the device mesh.
+
+The paper's decentralized MPI protocol (virtual parent topology, non-blocking
+task requests, incumbent broadcast, 3-state termination) maps to
+bulk-synchronous rounds on a TPU mesh (DESIGN.md §2):
+
+  round := expand(R engine steps)            # pure lane-local compute
+           → intra-device steal              # lanes balance within a chip
+           → cross-device steal              # collectives over the mesh
+           → incumbent all-reduce(min)       # paper's notification broadcast
+           → termination all-reduce          # paper's 3-state protocol
+
+Cross-device steal (deterministic, loss-free):
+
+  1. every device advertises (idle_count, donatable_count) — all_gather;
+  2. a greedy prefix quota assigns each device a donation count such that
+     Σ donate_i ≤ Σ idle_i (no extracted task can go unclaimed — extraction
+     marks the donor slot DELEGATED, so an unclaimed task would be a lost
+     subtree; the quota rule makes claiming a bijection);
+  3. devices extract their quota (heaviest first) and all_gather the index
+     vectors — O(d) int8 each, the paper's compact task encoding is what
+     makes this affordable at 512+ devices;
+  4. device r's idle lanes claim the tasks whose global rank matches their
+     global thief rank (pure arithmetic, no extra messages);
+  5. psum-min of the incumbent; the round loop ends when the global number
+     of active lanes and donatable tasks are both zero.
+
+The host driver (`solve`) runs jitted rounds in a Python loop so that
+checkpointing (paper §VII: persist ``current_idx``), elastic re-sharding and
+fault injection happen at round boundaries — the production posture for
+restartable long jobs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.api import UNVISITED, INF_VALUE, BinaryProblem
+from repro.core import steal
+from repro.core.engine import Lanes, init_lanes, make_expand
+
+
+class SolveStats(NamedTuple):
+    best: int
+    rounds: int
+    nodes: int
+    t_s: int           # total tasks received (paper's T_S numerator)
+    t_r: int           # total task requests (paper's T_R numerator)
+    donated: int
+    lanes: int
+
+
+def _axis_rank(axis_names: Sequence[str]) -> jnp.ndarray:
+    """Linearized device rank over (possibly multiple) mesh axes."""
+    rank = jnp.int32(0)
+    for name in axis_names:
+        rank = rank * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return rank
+
+
+def _num_devices(axis_names: Sequence[str]) -> int:
+    n = 1
+    for name in axis_names:
+        n *= jax.lax.axis_size(name)
+    return n
+
+
+def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
+                       axis_names: Sequence[str], max_ship: int) -> Lanes:
+    """One cross-device steal phase (steps 1-4 above).
+
+    ``max_ship`` bounds tasks shipped per device per round (static shape of
+    the all_gather payload).
+    """
+    w, il = lanes.idx.shape
+    ax = tuple(axis_names)
+    me = _axis_rank(ax)
+
+    idle = (~lanes.active).astype(jnp.int32)
+    demand_local = jnp.sum(idle)
+    slots = steal.donor_slots(lanes)
+    supply_local = jnp.sum((lanes.active & (slots < il)).astype(jnp.int32))
+    supply_local = jnp.minimum(supply_local, max_ship)
+
+    # (1) advertise; all_gather along the flattened mesh axes.
+    summary = jnp.stack([demand_local, supply_local])
+    all_sum = jax.lax.all_gather(summary, ax, tiled=False)  # [D, 2]
+    all_sum = all_sum.reshape(-1, 2)
+    demands, supplies = all_sum[:, 0], all_sum[:, 1]
+    total_demand = jnp.sum(demands)
+
+    # (2) greedy prefix quota: devices donate in rank order until demand met.
+    presum = jnp.cumsum(supplies) - supplies
+    quota = jnp.clip(total_demand - jnp.minimum(presum, total_demand),
+                     0, supplies)
+    my_quota = quota[me]
+
+    # Don't ship to ourselves what we can solve locally: local thieves are
+    # served by the intra-device round that precedes this phase, so demand
+    # here is already net of local matches.
+    lanes, bits, tdepth, valid = steal.extract_tasks(
+        lanes, my_quota, max_tasks=max_ship)
+
+    # (3) ship the index vectors (tiny: max_ship × IDX_LEN int8).
+    payload = jnp.concatenate(
+        [bits.astype(jnp.int32), tdepth[:, None], valid[:, None].astype(jnp.int32)],
+        axis=1)                                            # [S, IL+2]
+    world = jax.lax.all_gather(payload, ax, tiled=False).reshape(
+        -1, max_ship, il + 2)                               # [D, S, IL+2]
+
+    # (4) claim by global rank arithmetic.
+    task_counts = quota                                     # tasks from dev j
+    task_offset = jnp.cumsum(task_counts) - task_counts
+    thief_offset = (jnp.cumsum(demands) - demands)[me]
+
+    n_tasks_total = jnp.sum(task_counts)
+    my_idle_rank = jnp.cumsum(idle) - idle                  # per-lane
+    my_global_rank = thief_offset + my_idle_rank            # [W]
+
+    # Flatten world tasks in (device, slot) order; the g-th valid global task
+    # lives at flat position: device j with task_offset[j] <= g <
+    # task_offset[j]+quota[j], slot g - task_offset[j].
+    g = jnp.clip(my_global_rank, 0, jnp.maximum(n_tasks_total - 1, 0))
+    src_dev = jnp.sum((task_offset[None, :] <= g[:, None]).astype(jnp.int32),
+                      axis=1) - 1
+    src_dev = jnp.clip(src_dev, 0, world.shape[0] - 1)
+    src_slot = jnp.clip(g - task_offset[src_dev], 0, max_ship - 1)
+    got = (~lanes.active) & (my_global_rank < n_tasks_total)
+
+    recv = world[src_dev, src_slot]                         # [W, IL+2]
+    rbits = jnp.where(got[:, None], recv[:, :il].astype(jnp.int8), UNVISITED)
+    rdepth = jnp.where(got, recv[:, il], 0)
+    rvalid = got & (recv[:, il + 1] > 0)
+
+    lanes = lanes._replace(t_r=lanes.t_r + (~lanes.active).astype(jnp.int32))
+    return steal.install_tasks(problem, lanes, rbits, rdepth, rvalid)
+
+
+def make_round(problem: BinaryProblem, steps_per_round: int,
+               axis_names: Sequence[str] = (), max_ship: int = 16,
+               ) -> Callable[[Lanes], Tuple[Lanes, jnp.ndarray]]:
+    """Build the per-device round body (expand → steal → share → count).
+
+    With empty ``axis_names`` this is the single-device round used by unit
+    tests; otherwise it must run inside shard_map over those axes.
+    """
+    expand = make_expand(problem, steps_per_round)
+
+    def round_fn(lanes: Lanes) -> Tuple[Lanes, jnp.ndarray]:
+        lanes = expand(lanes)
+        lanes = steal.balance_device(problem, lanes)
+        if axis_names:
+            lanes = cross_device_steal(problem, lanes, axis_names, max_ship)
+            # Paper's notification broadcast: share the incumbent value.
+            best = jax.lax.pmin(lanes.best, tuple(axis_names))
+            lanes = lanes._replace(best=best)
+        # Termination metric: active lanes + donatable slots, globally.
+        slots = steal.donor_slots(lanes)
+        open_work = (jnp.sum(lanes.active.astype(jnp.int32))
+                     + jnp.sum((slots < lanes.idx.shape[1]).astype(jnp.int32)))
+        if axis_names:
+            open_work = jax.lax.psum(open_work, tuple(axis_names))
+        return lanes, open_work
+
+    return round_fn
+
+
+def make_distributed_round(problem: BinaryProblem, mesh: Mesh,
+                           steps_per_round: int, max_ship: int = 16):
+    """shard_map the round over every axis of ``mesh`` (flat worker pool)."""
+    axes = tuple(mesh.axis_names)
+    round_fn = make_round(problem, steps_per_round, axes, max_ship)
+
+    # Lane arrays shard their leading W-dim over all mesh axes; scalars
+    # (best, steps) and the incumbent payload are replicated per device.
+    def in_spec_for(field, leaf):
+        if field in ("best", "steps"):
+            return P()
+        if field == "best_payload":
+            return P()
+        return P(axes)
+
+    in_specs = Lanes(**{f: jax.tree_util.tree_map(
+        lambda _: in_spec_for(f, _), getattr(_lanes_proto(problem), f))
+        for f in Lanes._fields})
+
+    fn = shard_map(round_fn, mesh=mesh, in_specs=(in_specs,),
+                   out_specs=(in_specs, P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def _lanes_proto(problem: BinaryProblem) -> Lanes:
+    """Structure-only prototype used to build PartitionSpec pytrees."""
+    return init_lanes(problem, 1, seed_root=False)
+
+
+def solve(problem: BinaryProblem,
+          num_lanes: int,
+          steps_per_round: int = 256,
+          max_rounds: int = 100000,
+          mesh: Optional[Mesh] = None,
+          max_ship: int = 16,
+          bootstrap_rounds: int = 0,
+          bootstrap_steps: int = 8,
+          checkpoint_every: int = 0,
+          checkpoint_path: Optional[str] = None,
+          resume_from: Optional[str] = None,
+          on_round: Optional[Callable[[int, Lanes, int], None]] = None,
+          ) -> Tuple[Any, SolveStats, Lanes]:
+    """Host driver: run rounds until global termination.
+
+    ``num_lanes`` is the per-device lane count.  With ``mesh=None`` the solve
+    is single-device (unit tests, benchmarks); with a mesh every device runs
+    ``num_lanes`` lanes and rounds are the shard_map'd collective version.
+
+    Bootstrap: a few short rounds (small R) ramp work distribution up the
+    same way the paper's GETPARENT topology floods initial tasks — without
+    it, every lane but lane 0 idles for a full round.
+
+    ``resume_from`` restores a checkpoint written by any earlier run at ANY
+    lane/device count (elastic restart, paper §VII): surplus tasks beyond
+    the new lane count wait in a host-side pool and are installed into idle
+    lanes at round boundaries.
+    """
+    from repro.core import checkpoint as ckpt
+
+    if mesh is None:
+        round_fn = jax.jit(make_round(problem, steps_per_round))
+        boot_fn = (jax.jit(make_round(problem, bootstrap_steps))
+                   if bootstrap_rounds else None)
+        total_lanes = num_lanes
+    else:
+        n_dev = int(np.prod(mesh.devices.shape))
+        round_fn = make_distributed_round(problem, mesh, steps_per_round,
+                                          max_ship)
+        boot_fn = (make_distributed_round(problem, mesh, bootstrap_steps,
+                                          max_ship)
+                   if bootstrap_rounds else None)
+        total_lanes = num_lanes * n_dev
+
+    pool: list = []
+    if resume_from is not None:
+        lanes, pool = ckpt.restore(resume_from, problem, total_lanes)
+        bootstrap_rounds = max(bootstrap_rounds, 1)  # respread stolen work
+    else:
+        lanes = init_lanes(problem, total_lanes)
+    if mesh is not None:
+        lanes = _shard_lanes(lanes, mesh)
+
+    def feed_pool(lanes):
+        nonlocal pool
+        if pool:
+            lanes = _gather_lanes(lanes)
+            lanes, pool = ckpt.install_pending(problem, lanes, pool)
+            if mesh is not None:
+                lanes = _shard_lanes(lanes, mesh)
+        return lanes
+
+    rounds, done = 0, False
+    for _ in range(bootstrap_rounds):
+        lanes = feed_pool(lanes)
+        lanes, open_work = boot_fn(lanes) if boot_fn else round_fn(lanes)
+        rounds += 1
+        if int(open_work) == 0 and not pool:
+            done = True
+            break
+    while not done and rounds < max_rounds:
+        lanes = feed_pool(lanes)
+        lanes, open_work = round_fn(lanes)
+        rounds += 1
+        if on_round is not None:
+            on_round(rounds, lanes, int(open_work))
+        if checkpoint_every and checkpoint_path and rounds % checkpoint_every == 0:
+            ckpt.save(checkpoint_path, _gather_lanes(lanes))
+        if int(open_work) == 0 and not pool:
+            done = True
+
+    stats = SolveStats(
+        best=int(jnp.min(lanes.best)),
+        rounds=rounds,
+        nodes=int(jnp.sum(lanes.nodes)),
+        t_s=int(jnp.sum(lanes.t_s)),
+        t_r=int(jnp.sum(lanes.t_r)),
+        donated=int(jnp.sum(lanes.donated)),
+        lanes=int(lanes.active.shape[0]),
+    )
+    best_payload = jax.tree_util.tree_map(np.asarray, lanes.best_payload)
+    return best_payload, stats, lanes
+
+
+def _gather_lanes(lanes: Lanes) -> Lanes:
+    """Pull lane state to host (fully addressable) for pool/ckpt surgery."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.asarray(np.asarray(jax.device_get(l))), lanes)
+
+
+def _shard_lanes(lanes: Lanes, mesh: Mesh) -> Lanes:
+    """Place lane arrays sharded over all mesh axes (leading dim)."""
+    axes = tuple(mesh.axis_names)
+
+    def put(field, leaf):
+        if field in ("best", "steps") or leaf.ndim == 0:
+            spec = P()
+        elif field == "best_payload":
+            spec = P()
+        else:
+            spec = P(axes)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return Lanes(**{
+        f: jax.tree_util.tree_map(lambda l: put(f, l), getattr(lanes, f))
+        for f in Lanes._fields})

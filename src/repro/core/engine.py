@@ -1,0 +1,241 @@
+"""Vectorized recursive-backtracking engine (the paper's SERIAL-RB, SIMD-ified).
+
+A *lane* is the TPU analogue of the paper's "core": an independent depth-first
+searcher whose entire control state is the paper's ``current_idx`` array plus
+a stack of search-node states along the live root-to-node path.  ``W`` lanes
+advance in lockstep under ``vmap``; one *engine step* visits exactly one
+search-node per active lane (one ``Problem.apply`` evaluation — the unit the
+paper's butterfly-effect analysis in §III-D counts).
+
+Control encoding per lane (paper Fig. 2/3 semantics):
+
+  idx[j] ∈ {UNVISITED, DELEGATED, LEFT, RIGHT} — the branch taken from depth
+  ``j`` to ``j+1`` along the live path; LEFT means the right sibling at depth
+  ``j+1`` is still pending, DELEGATED means it was stolen (skip on backtrack,
+  Fig. 3 lines 2-3).
+
+  depth       — current node's depth; its state is ``stack[depth]``.
+  base        — the lane owns the subtree rooted at depth ``base`` (its "main
+                task"); backtracking past it makes the lane idle.  Slots below
+                ``base`` are the fixed path of the stolen task and are never
+                donated (they belong to the chain of previous owners).
+
+The incumbent (``best``) is shared across lanes every step — the vectorized
+version of the paper's solution-broadcast notification messages.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE, BinaryProblem
+
+PyTree = Any
+
+
+class Lanes(NamedTuple):
+    """State of W lanes on one device.  All leading dims are W unless noted."""
+
+    idx: jnp.ndarray          # int8  [W, IDX_LEN]
+    depth: jnp.ndarray        # int32 [W]
+    base: jnp.ndarray         # int32 [W]
+    active: jnp.ndarray       # bool  [W]
+    stack: PyTree             # leaves [W, STACK_LEN, ...]
+    best: jnp.ndarray         # int32 []     — device-wide incumbent value
+    best_payload: PyTree      # leaves [...] — incumbent solution (no W dim)
+    nodes: jnp.ndarray        # int32 [W]    — search-nodes visited
+    t_s: jnp.ndarray          # int32 [W]    — tasks received (paper's T_S)
+    t_r: jnp.ndarray          # int32 [W]    — task requests made (paper's T_R)
+    donated: jnp.ndarray      # int32 [W]    — tasks donated
+    steps: jnp.ndarray        # int32 []     — engine steps executed
+
+
+def idx_len(problem: BinaryProblem) -> int:
+    return problem.max_depth + 1
+
+
+def stack_len(problem: BinaryProblem) -> int:
+    return problem.max_depth + 2
+
+
+def init_lanes(problem: BinaryProblem, num_lanes: int,
+               seed_root: bool = True) -> Lanes:
+    """Allocate W idle lanes; optionally hand lane 0 the root task N_{0,0}.
+
+    The paper's initialization assigns the root to C_0 and lets every other
+    core request its first task through the virtual topology; here all other
+    lanes start idle and are fed by the first steal rounds (bootstrap).
+    """
+    w, il, sl = num_lanes, idx_len(problem), stack_len(problem)
+    root = problem.root()
+
+    def alloc(leaf):
+        buf = jnp.zeros((w, sl) + leaf.shape, leaf.dtype)
+        if seed_root:
+            buf = buf.at[0, 0].set(leaf)
+        return buf
+
+    stack = jax.tree_util.tree_map(alloc, root)
+    active = jnp.zeros((w,), jnp.bool_)
+    if seed_root:
+        active = active.at[0].set(True)
+    return Lanes(
+        idx=jnp.full((w, il), UNVISITED, jnp.int8),
+        depth=jnp.zeros((w,), jnp.int32),
+        base=jnp.zeros((w,), jnp.int32),
+        active=active,
+        stack=stack,
+        best=INF_VALUE,
+        best_payload=problem.payload_zero(),
+        nodes=jnp.zeros((w,), jnp.int32),
+        t_s=jnp.zeros((w,), jnp.int32).at[0].set(1 if seed_root else 0),
+        t_r=jnp.zeros((w,), jnp.int32),
+        donated=jnp.zeros((w,), jnp.int32),
+        steps=jnp.int32(0),
+    )
+
+
+def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
+    """Advance ONE lane by one node visit.  Returns updated per-lane fields
+    plus (improved, value, payload) for incumbent election across lanes.
+
+    Branchless: every path is computed and blended with ``where`` so the
+    function vmaps over lanes with no divergence. ``apply`` is evaluated
+    exactly once per step (the hot spot).
+    """
+    il = idx.shape[0]
+    d = jnp.clip(depth, 0, il - 1)
+    state = jax.tree_util.tree_map(
+        lambda s: jax.lax.dynamic_index_in_dim(s, d, keepdims=False), stack)
+    c = idx[d]
+    first = c == UNVISITED
+
+    is_sol, val = problem.leaf_value(state)
+    lb = problem.lower_bound(state)
+
+    improved = active & first & is_sol & (val < best)
+    best_eff = jnp.where(improved, val, best)
+    terminal = is_sol | (lb >= best_eff)
+
+    # Which child to generate: left on first arrival, right after returning
+    # from a completed left subtree.
+    take_right = (~first) & (c == LEFT)
+    descend = active & ((first & ~terminal) | take_right)
+    bit = jnp.where(first, jnp.int32(0), jnp.int32(1))
+    child = problem.apply(state, bit)
+
+    wpos = jnp.clip(d + 1, 0, il)  # stack has one extra slot
+    new_stack = jax.tree_util.tree_map(
+        lambda s, ch: jax.lax.dynamic_update_index_in_dim(
+            s,
+            jnp.where(descend, ch,
+                      jax.lax.dynamic_index_in_dim(s, wpos, keepdims=False)),
+            wpos, axis=0),
+        stack, child)
+
+    # current_idx maintenance (paper Fig. 3, line 4).
+    slot_now = jnp.where(descend & first, LEFT,
+                         jnp.where(descend & take_right, RIGHT, c))
+    new_idx = idx.at[d].set(jnp.where(active, slot_now, c))
+    # Fresh child slot starts UNVISITED.
+    child_slot = jnp.where(descend, UNVISITED, new_idx[jnp.clip(d + 1, 0, il - 1)])
+    new_idx = new_idx.at[jnp.clip(d + 1, 0, il - 1)].set(child_slot)
+
+    new_depth = jnp.where(active, jnp.where(descend, depth + 1, depth - 1), depth)
+    new_active = active & (new_depth >= base)
+    new_depth = jnp.maximum(new_depth, 0)
+
+    visited = active & first
+    payload = problem.solution_payload(state)
+    return (new_idx, new_depth, new_active, new_stack, visited,
+            improved, jnp.where(improved, val, INF_VALUE), payload)
+
+
+def make_step(problem: BinaryProblem):
+    """Build the vectorized one-step transition Lanes -> Lanes."""
+
+    step_v = jax.vmap(functools.partial(_step_lane, problem),
+                      in_axes=(0, 0, 0, 0, 0, None))
+
+    def step(lanes: Lanes) -> Lanes:
+        (idx, depth, active, stack, visited, improved, vals,
+         payloads) = step_v(lanes.idx, lanes.depth, lanes.base, lanes.active,
+                            lanes.stack, lanes.best)
+        # Incumbent election across lanes (the paper's broadcast, free here).
+        best_lane = jnp.argmin(vals)
+        lane_best = vals[best_lane]
+        any_improved = lane_best < lanes.best
+        new_best = jnp.minimum(lanes.best, lane_best)
+        new_payload = jax.tree_util.tree_map(
+            lambda p, old: jnp.where(any_improved, p[best_lane], old),
+            payloads, lanes.best_payload)
+        return lanes._replace(
+            idx=idx, depth=depth, active=active, stack=stack,
+            best=new_best, best_payload=new_payload,
+            nodes=lanes.nodes + visited.astype(jnp.int32),
+            steps=lanes.steps + 1)
+
+    return step
+
+
+def make_expand(problem: BinaryProblem, num_steps: int):
+    """Run up to ``num_steps`` engine steps, early-exiting when all idle.
+
+    This is the compute phase between steal rounds; ``num_steps`` is the
+    round granularity R (the BSP analogue of the paper's disruption-time
+    knob, hillclimbed in EXPERIMENTS.md §Perf).
+    """
+    step = make_step(problem)
+
+    def expand(lanes: Lanes) -> Lanes:
+        def cond(carry):
+            i, lanes = carry
+            return (i < num_steps) & jnp.any(lanes.active)
+
+        def body(carry):
+            i, lanes = carry
+            return i + 1, step(lanes)
+
+        _, lanes = jax.lax.while_loop(cond, body, (jnp.int32(0), lanes))
+        return lanes
+
+    return expand
+
+
+def replay_path(problem: BinaryProblem, bits: jnp.ndarray,
+                path_depth: jnp.ndarray, stack: PyTree) -> PyTree:
+    """CONVERTINDEX: rebuild the state stack for a task index (paper §IV-A).
+
+    Starting from the root, re-applies the branch decisions ``bits[0..path_
+    depth-1]`` (delegation marks already flattened to LEFT by FIXINDEX).
+    Fills ``stack[j]`` for j = 0..path_depth and returns the new stack.  The
+    cost is O(D_MAX) ``apply`` calls — the paper's serial-overhead term,
+    incurred once per received task.
+    """
+    il = bits.shape[0]
+    root = problem.root()
+    stack = jax.tree_util.tree_map(
+        lambda s, r: jax.lax.dynamic_update_index_in_dim(s, r, 0, axis=0),
+        stack, root)
+
+    def body(j, carry):
+        state, stack = carry
+        bit = jnp.clip(bits[j].astype(jnp.int32), 0, 1)
+        nxt = problem.apply(state, bit)
+        take = j < path_depth
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(take, b, a), state, nxt)
+        stack = jax.tree_util.tree_map(
+            lambda s, st: jax.lax.dynamic_update_index_in_dim(
+                s, jnp.where(take, st,
+                             jax.lax.dynamic_index_in_dim(s, jnp.clip(j + 1, 0, s.shape[0] - 1), keepdims=False)),
+                jnp.clip(j + 1, 0, s.shape[0] - 1), axis=0),
+            stack, state)
+        return state, stack
+
+    _, stack = jax.lax.fori_loop(0, il, body, (root, stack))
+    return stack

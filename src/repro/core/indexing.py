@@ -1,0 +1,190 @@
+"""Indexed search trees (paper §IV-A and §IV-C).
+
+This module contains the paper's index machinery in two forms:
+
+1. *Faithful scalar reference* (`get_heaviest_task_index`, `fix_index`) —
+   direct transcriptions of Fig. 4, operating on Python lists.  These are the
+   oracles for property tests and the protocol simulator in
+   ``repro.core.serial``.
+
+2. *Vectorized jnp versions* (`heaviest_open_slot`, `extract_task`,
+   `fix_task_bits`) operating on fixed-width ``int8[D_MAX]`` arrays with the
+   sentinels from :mod:`repro.core.api`.  These are what the engine and the
+   steal round use, vmapped over lanes.
+
+Binary-tree indices are bit paths: ``idx[j]`` is the branch taken from depth
+``j`` to ``j+1``.  ``idx[j] == 0`` means the left child is in progress, so the
+*right* sibling at depth ``j+1`` is still unexplored — the shallowest such
+slot is the heaviest task (weight ``1/(d+1)``).  Marking a slot ``-1``
+(DELEGATED) records that this right sibling was shipped to another worker and
+must be skipped when backtracking (Fig. 3, lines 2-3).
+
+§IV-C (arbitrary branching factor) is implemented by
+`ArbitraryIndex`: a 2 x D_MAX array whose first row is the child-position path
+(idx1) and whose second row counts unexplored right siblings (idx2).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DELEGATED, LEFT, RIGHT, UNVISITED
+
+# ---------------------------------------------------------------------------
+# 1. Faithful scalar reference (paper Fig. 4) — Python ints, used by tests
+#    and the serial protocol simulator.
+# ---------------------------------------------------------------------------
+
+
+def get_heaviest_task_index(current_idx: List[int]) -> Optional[List[int]]:
+    """Paper Fig. 4 (top): extract the heaviest unexplored task.
+
+    Scans top-down for the first slot equal to 0 (left child in progress ⇒
+    right sibling pending), marks it -1 in-place, and returns the prefix
+    ``current_idx[0..i]`` (inclusive), exactly as the paper does.  Returns
+    None when no task is available.
+    """
+    for i in range(len(current_idx)):
+        if current_idx[i] == 0:
+            current_idx[i] = -1
+            return list(current_idx[: i + 1])
+    return None
+
+
+def fix_index(temp_idx: List[int]) -> List[int]:
+    """Paper Fig. 4 (bottom): convert an extracted prefix into a task index.
+
+    Interior negative entries (slots that were delegated *earlier* along the
+    donor's path) are reset to 0 — the donor's path went left there — and the
+    last entry becomes 1: the stolen task is the right sibling.
+    """
+    out = list(temp_idx)
+    for i in range(len(out) - 1):
+        if out[i] < 0:
+            out[i] = 0
+    out[-1] = 1
+    return out
+
+
+def index_to_position(bits: List[int]) -> Tuple[int, int]:
+    """(depth, position) of the node addressed by a bit-path (paper §II)."""
+    d = len(bits)
+    p = 0
+    for b in bits:
+        p = (p << 1) | int(b)
+    return d, p
+
+
+# ---------------------------------------------------------------------------
+# 2. Vectorized jnp versions used by the engine (fixed width D_MAX).
+# ---------------------------------------------------------------------------
+
+
+def heaviest_open_slot(idx: jnp.ndarray, base_depth: jnp.ndarray,
+                       depth: jnp.ndarray) -> jnp.ndarray:
+    """Depth of the shallowest open (stealable) slot, or D_MAX if none.
+
+    A slot j is open iff base_depth <= j < depth and idx[j] == LEFT: the lane
+    went left at depth j and the right sibling is unexplored.  Slots below
+    ``base_depth`` belong to the subtree's owner further up the (virtual)
+    delegation chain and are never stealable — the vectorized analogue of the
+    paper's "each core only donates from its own main task".
+    """
+    d_max = idx.shape[-1]
+    j = jnp.arange(d_max, dtype=jnp.int32)
+    open_mask = (idx == LEFT) & (j >= base_depth) & (j < depth)
+    return jnp.min(jnp.where(open_mask, j, jnp.int32(d_max)))
+
+
+def extract_task(idx: jnp.ndarray, slot: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized GETHEAVIESTTASKINDEX + FIXINDEX in one shot.
+
+    Marks ``idx[slot] = DELEGATED`` in the donor's array and returns
+    ``(donor_idx, task_bits)`` where ``task_bits`` is the *fixed* index of the
+    stolen node: bits[j<slot] are the donor's path with delegation marks
+    flattened to LEFT (FIXINDEX), ``bits[slot] = RIGHT``, and padding is
+    UNVISITED.  The stolen node lives at depth ``slot + 1``.
+    """
+    d_max = idx.shape[-1]
+    j = jnp.arange(d_max, dtype=jnp.int32)
+    donor_idx = jnp.where(j == slot, DELEGATED, idx)
+    prefix = jnp.where(idx < 0, LEFT, idx)           # FIXINDEX interior rule
+    bits = jnp.where(j < slot, prefix, UNVISITED)
+    bits = jnp.where(j == slot, RIGHT, bits)
+    return donor_idx, bits.astype(jnp.int8)
+
+
+def task_weight(slot: jnp.ndarray) -> jnp.ndarray:
+    """Paper §II: w(N_{d,p}) = 1/(d+1); the stolen node is at depth slot+1."""
+    return 1.0 / (slot.astype(jnp.float32) + 2.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. Arbitrary branching factor (paper §IV-C) — reference implementation.
+# ---------------------------------------------------------------------------
+
+
+class ArbitraryIndex:
+    """Two-row index for trees with arbitrary branching factor (§IV-C).
+
+    Row 0 (idx1): child position taken at each depth (the root-to-node path).
+    Row 1 (idx2): number of unexplored *right* siblings at each depth.
+
+    The heaviest task is found at the first depth x whose idx2 entry is
+    non-zero; stealing sends the last ``s`` siblings (the paper requires the
+    stolen set S to be a suffix of the children ordering) and decrements idx2
+    by |S|.  With branching factor 2 this degenerates exactly to the binary
+    scheme above, which the property tests assert.
+    """
+
+    def __init__(self, max_depth: int):
+        self.max_depth = max_depth
+        self.idx1 = np.full(max_depth, -2, dtype=np.int32)
+        self.idx2 = np.full(max_depth, -2, dtype=np.int32)
+        self.depth = 0
+
+    def push_child(self, k: int, num_children: int) -> None:
+        """Descend to the k-th child (0-based) of a node with num_children."""
+        self.idx1[self.depth] = k
+        self.idx2[self.depth] = num_children - (k + 1)
+        self.depth += 1
+
+    def pop(self) -> None:
+        self.depth -= 1
+        self.idx1[self.depth] = -2
+        self.idx2[self.depth] = -2
+
+    def advance_sibling(self) -> bool:
+        """Move to the next unexplored right sibling at the current depth.
+
+        Returns False when none remain (all explored or delegated).
+        """
+        d = self.depth - 1
+        if d < 0 or self.idx2[d] <= 0:
+            return False
+        self.idx1[d] += 1
+        self.idx2[d] -= 1
+        return True
+
+    def heaviest_depth(self) -> Optional[int]:
+        for x in range(self.depth):
+            if self.idx2[x] > 0:
+                return x
+        return None
+
+    def steal(self, take: int = 1) -> Optional[Tuple[np.ndarray, int, int]]:
+        """Extract up to ``take`` trailing siblings of the heaviest depth.
+
+        Returns (path idx1[0..x], first stolen child position, count) and
+        decrements idx2[x] — the paper's "choose S as a suffix" rule.
+        """
+        x = self.heaviest_depth()
+        if x is None:
+            return None
+        s = min(take, int(self.idx2[x]))
+        first = self.idx1[x] + (self.idx2[x] - s) + 1
+        self.idx2[x] -= s
+        return self.idx1[: x + 1].copy(), int(first), s

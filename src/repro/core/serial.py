@@ -1,0 +1,352 @@
+"""Faithful scalar reference of the paper's algorithms (Figs. 1, 3-5, 7).
+
+Three artifacts live here, all pure Python (no JAX), used as oracles:
+
+1. ``serial_rb`` — SERIAL-RB (Fig. 1) as an iterative stepper; returns the
+   optimum, the visit log and node count.  This is the ground truth every
+   parallel configuration must match.
+
+2. ``ParallelRBSimulator`` — a discrete-time simulator of PARALLEL-RB
+   (Fig. 7) with the paper's *actual* protocol: GETPARENT initial virtual
+   topology (Fig. 5), round-robin GETNEXTPARENT re-probing, task requests
+   answered with GETHEAVIESTTASKINDEX / FIXINDEX (Fig. 4), incumbent
+   broadcast on improvement, and ``passes > 2`` three-state termination.
+   One simulator *tick* advances every active core by one node visit — the
+   machine-independent unit the paper's butterfly-effect analysis counts —
+   so the makespan in ticks is the simulated parallel running time and
+   per-core T_S / T_R match the paper's Tables I/II semantics.
+
+3. ``PyProblem`` — the problem protocol for the scalar world (plain Python
+   callables).  ``repro.problems`` exposes each problem in both forms and
+   tests assert the jnp engine agrees with this simulator node-for-node.
+
+The simulator is the **paper-faithful baseline** recorded in EXPERIMENTS.md;
+the BSP/JAX engine in ``repro.core.engine``/``distributed`` is the TPU-native
+adaptation measured against it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.indexing import fix_index, get_heaviest_task_index
+
+INF = 2 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class PyProblem:
+    """Scalar (pure-Python) version of :class:`repro.core.api.BinaryProblem`.
+
+    Semantics match the jnp form exactly: binary tree, minimization,
+    deterministic branching.  ``apply`` must be side-effect free (returns a
+    new state); the stepper keeps the explicit stack, which is the scalar
+    analogue of the paper's undo-based backtracking (§III-D).
+    """
+
+    name: str
+    max_depth: int
+    root: Callable[[], Any]
+    apply: Callable[[Any, int], Any]
+    leaf_value: Callable[[Any], Tuple[bool, int]]
+    lower_bound: Callable[[Any], int]
+
+
+class _DFS:
+    """Iterative one-node-per-step DFS with the paper's current_idx encoding.
+
+    ``idx[j]`` is the branch (0/1) taken from depth j to j+1 on the live
+    path, ``-1`` = that right sibling was delegated (skip on backtrack),
+    ``-2`` = unvisited.  ``base`` is the depth of the subtree this core owns
+    (its *main task*): backtracking above ``base`` means the core is done.
+    """
+
+    UNVISITED, DELEGATED = -2, -1
+
+    def __init__(self, problem: PyProblem):
+        self.p = problem
+        self.idx: List[int] = [self.UNVISITED] * (problem.max_depth + 1)
+        self.stack: List[Any] = [None] * (problem.max_depth + 2)
+        self.depth = 0
+        self.base = 0
+        self.active = False
+        self.nodes = 0
+
+    def start_root(self) -> None:
+        self.stack[0] = self.p.root()
+        self.depth, self.base, self.active = 0, 0, True
+        self.idx = [self.UNVISITED] * (self.p.max_depth + 1)
+
+    def start_task(self, bits: List[int]) -> None:
+        """CONVERTINDEX: replay a (FIXINDEX-ed) task index from the root."""
+        self.idx = [self.UNVISITED] * (self.p.max_depth + 1)
+        state = self.p.root()
+        self.stack[0] = state
+        for j, b in enumerate(bits):
+            self.idx[j] = b
+            state = self.p.apply(state, b)
+            self.stack[j + 1] = state
+        self.depth = self.base = len(bits)
+        self.active = True
+
+    def step(self, best: int) -> Tuple[bool, int]:
+        """Visit one node. Returns (improved, value-if-improved-else-INF)."""
+        if not self.active:
+            return False, INF
+        d = self.depth
+        state = self.stack[d]
+        c = self.idx[d]
+        improved, val = False, INF
+
+        if c == self.UNVISITED:                      # first arrival: visit node
+            self.nodes += 1
+            is_sol, v = self.p.leaf_value(state)
+            if is_sol and v < best:                  # IsSolution (Fig. 3 l.5-6)
+                improved, val, best = True, v, v
+            pruned = self.p.lower_bound(state) >= best
+            if is_sol or pruned:                     # leaf: backtrack (l.7-8)
+                self._backtrack()
+            else:                                    # descend left (l.13-16)
+                self._descend(0)
+        elif c == 0:                                 # left done: go right
+            self._descend(1)
+        else:                                        # c in {1, -1}: exhausted
+            self._backtrack()
+        return improved, val
+
+    def _descend(self, bit: int) -> None:
+        d = self.depth
+        self.idx[d] = bit
+        self.stack[d + 1] = self.p.apply(self.stack[d], bit)
+        if d + 1 <= self.p.max_depth:
+            self.idx[d + 1] = self.UNVISITED
+        self.depth = d + 1
+
+    def _backtrack(self) -> None:
+        self.depth -= 1
+        if self.depth < self.base:
+            self.active = False
+            self.depth = self.base
+
+    # -- the paper's Fig. 4 operations on the live path -------------------
+
+    def get_heaviest(self) -> Optional[List[int]]:
+        """GETHEAVIESTTASKINDEX over the live prefix [base, depth)."""
+        live = self.idx[: self.depth]
+        for i in range(self.base, self.depth):
+            if live[i] == 0:
+                self.idx[i] = self.DELEGATED
+                return list(self.idx[: i + 1])
+        return None
+
+
+def serial_rb(problem: PyProblem, max_steps: int = 10 ** 8,
+              record_visits: bool = False
+              ) -> Tuple[int, int, List[Tuple[int, ...]]]:
+    """SERIAL-RB (Fig. 1): returns (best value, nodes visited, visit log).
+
+    The visit log (optional) records the bit-path of every *visited* node —
+    the oracle for the "no node explored twice / none lost" property tests.
+    """
+    dfs = _DFS(problem)
+    dfs.start_root()
+    best = INF
+    visits: List[Tuple[int, ...]] = []
+    steps = 0
+    while dfs.active and steps < max_steps:
+        if record_visits and dfs.idx[dfs.depth] == _DFS.UNVISITED:
+            visits.append(tuple(dfs.idx[: dfs.depth]))
+        improved, val = dfs.step(best)
+        if improved:
+            best = val
+        steps += 1
+    return best, dfs.nodes, visits
+
+
+@dataclasses.dataclass
+class CoreStats:
+    t_s: int = 0           # tasks received (main tasks), paper's T_S
+    t_r: int = 0           # task requests issued, paper's T_R
+    nodes: int = 0
+
+
+class ParallelRBSimulator:
+    """Discrete-time simulation of PARALLEL-RB (Fig. 7) on ``c`` cores.
+
+    Message model: requests and responses are mailbox entries delivered
+    instantly but *consumed at the receiver's next tick* — one-tick latency,
+    which preserves the paper's asynchrony (a donor answers requests between
+    node visits, Fig. 3 lines 9-11) without modelling a network.
+
+    States: 'active' (has a main task), 'idle' (requesting), 'inactive'
+    (passes > 2, Fig. 7 line 5).  Termination when all cores are inactive.
+    """
+
+    def __init__(self, problem: PyProblem, c: int,
+                 instant_bound_share: bool = True):
+        self.p = problem
+        self.c = c
+        self.cores = [_DFS(problem) for _ in range(c)]
+        self.stats = [CoreStats() for _ in range(c)]
+        self.state = ["idle"] * c
+        self.parent = [get_parent(r, c) for r in range(c)]
+        self.passes = [0] * c
+        self.init = [True] * c
+        self.requests: List[deque] = [deque() for _ in range(c)]   # requester ranks
+        self.responses: List[deque] = [deque() for _ in range(c)]  # Optional[bits]
+        self.outstanding = [False] * c
+        self.best = INF
+        self.instant_bound_share = instant_bound_share
+        self.pending_best: Dict[int, int] = {}   # core -> best known (delayed mode)
+        self.local_best = [INF] * c
+        self.ticks = 0
+        self.cores[0].start_root()
+        self.state[0] = "active"
+        self.stats[0].t_s = 1
+
+    # ------------------------------------------------------------------
+
+    def _answer_requests(self, r: int) -> None:
+        """Fig. 3 lines 9-11: donor services queued requests between visits."""
+        while self.requests[r]:
+            requester = self.requests[r].popleft()
+            task = self.cores[r].get_heaviest() if self.state[r] == "active" else None
+            if task is not None:
+                task = fix_index(task)
+            self.responses[requester].append(task)
+
+    def _core_best(self, r: int) -> int:
+        return self.best if self.instant_bound_share else self.local_best[r]
+
+    def _broadcast_best(self, v: int) -> None:
+        """Notification message (§IV-B).  Instant mode models a free
+        broadcast; delayed mode delivers at each core's next tick (one-hop
+        latency), which only affects pruning efficiency, never correctness.
+        """
+        self.best = min(self.best, v)
+        if self.instant_bound_share:
+            for i in range(self.c):
+                self.local_best[i] = min(self.local_best[i], v)
+        else:
+            for i in range(self.c):
+                self.pending_best[i] = min(self.pending_best.get(i, INF), v)
+
+    def tick(self) -> None:
+        self.ticks += 1
+        if not self.instant_bound_share and self.pending_best:
+            for i, v in list(self.pending_best.items()):
+                self.local_best[i] = min(self.local_best[i], v)
+            self.pending_best.clear()
+        for r in range(self.c):
+            # Even inactive cores answer queued requests (with null) so no
+            # requester blocks forever — the paper's status broadcast makes
+            # this case rare; the mailbox makes it safe.
+            self._answer_requests(r)
+            if self.state[r] == "inactive":
+                continue
+            core = self.cores[r]
+            if self.state[r] == "active":
+                improved, val = core.step(self._core_best(r))
+                self.stats[r].nodes = core.nodes
+                if improved:
+                    self._broadcast_best(val)   # notification message (§IV-B)
+                if not core.active:
+                    self.state[r] = "idle"
+            if self.state[r] == "idle":
+                self._idle_step(r)
+
+    def _advance_parent(self, r: int) -> None:
+        """Fig. 7 lines 12-14 / 18: move to the next parent in the topology."""
+        if self.init[r]:
+            self.init[r] = False
+            self.parent[r] = (r + 1) % self.c
+        else:
+            self.parent[r], self.passes[r] = get_next_parent(
+                self.parent[r], r, self.c, self.passes[r])
+        if self.passes[r] > 2:                       # termination (l.5)
+            self.state[r] = "inactive"
+
+    def _idle_step(self, r: int) -> None:
+        if self.responses[r]:                        # consume a reply
+            self.outstanding[r] = False
+            task = self.responses[r].popleft()
+            if task is not None:
+                self.cores[r].start_task(task)
+                self.state[r] = "active"
+                self.stats[r].t_s += 1
+                self.passes[r] = 0
+                if self.init[r]:                     # first reply: l.14
+                    self.init[r] = False
+                    self.parent[r] = (r + 1) % self.c
+                return
+            self._advance_parent(r)                  # null reply: probe on
+            return
+        if self.outstanding[r]:
+            return                                   # wait for the reply
+        target = self.parent[r]
+        if target == r or self.state[target] == "inactive":
+            self._advance_parent(r)                  # skip dead/self parents
+            return
+        self.requests[target].append(r)
+        self.stats[r].t_r += 1
+        self.outstanding[r] = True
+
+    def run(self, max_ticks: int = 10 ** 7) -> "SimResult":
+        while not all(s == "inactive" for s in self.state):
+            if self.ticks >= max_ticks:
+                raise RuntimeError("simulator did not terminate")
+            self.tick()
+        return SimResult(
+            best=self.best,
+            makespan=self.ticks,
+            total_nodes=sum(st.nodes for st in self.stats),
+            t_s=[st.t_s for st in self.stats],
+            t_r=[st.t_r for st in self.stats],
+        )
+
+
+@dataclasses.dataclass
+class SimResult:
+    best: int
+    makespan: int
+    total_nodes: int
+    t_s: List[int]
+    t_r: List[int]
+
+    @property
+    def avg_t_s(self) -> float:
+        return sum(self.t_s) / len(self.t_s)
+
+    @property
+    def avg_t_r(self) -> float:
+        return sum(self.t_r) / len(self.t_r)
+
+
+# ---------------------------------------------------------------------------
+# Virtual topology (paper Fig. 5) — verbatim transcriptions.
+# ---------------------------------------------------------------------------
+
+
+def get_parent(r: int, c: int) -> int:
+    """GETPARENT (Fig. 5, top).  C_0's parent is itself by convention."""
+    parent = 0
+    for i in range(c):
+        if 2 ** i > r:
+            break
+        parent = r - 2 ** i
+    return parent
+
+
+def get_next_parent(parent: int, r: int, c: int, passes: int) -> Tuple[int, int]:
+    """GETNEXTPARENT (Fig. 5, bottom).  Returns (new parent, new passes).
+
+    ``passes`` increments each time the probe cycles past the core's own
+    rank — i.e. once per full unsuccessful sweep of all participants.
+    """
+    parent = (parent + 1) % c
+    if parent == r:
+        parent = (parent + 1) % c
+        passes += 1
+    return parent, passes

@@ -1,0 +1,115 @@
+"""Heaviest-task work stealing between lanes on one device (paper §IV-A/B).
+
+Every steal round, idle lanes (*thieves*) are matched with active lanes that
+have an open right-branch (*donors*).  Donor priority is the paper's implicit
+weight: the lane whose shallowest open slot is closest to the root donates
+first (w = 1/(d+1)).  Extraction is GETHEAVIESTTASKINDEX (mark DELEGATED,
+ship the prefix) and installation is FIXINDEX + CONVERTINDEX (replay).
+
+The donor→thief pairing is a deterministic ranked matching — the
+bulk-synchronous closed form of the paper's virtual-topology heuristic
+("request from the core expected to hold the heaviest task"): sorting donors
+by weight and pairing them with thieves in rank order is exactly what the
+GETPARENT tree converges to, computed in one argsort instead of message
+probing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import RIGHT, UNVISITED, BinaryProblem
+from repro.core.engine import Lanes, replay_path
+from repro.core.indexing import extract_task, heaviest_open_slot
+
+
+def donor_slots(lanes: Lanes) -> jnp.ndarray:
+    """Per-lane shallowest open slot (IDX_LEN = no donatable work)."""
+    return jax.vmap(heaviest_open_slot)(lanes.idx, lanes.base, lanes.depth)
+
+
+def extract_tasks(lanes: Lanes, num: jnp.ndarray, max_tasks: int
+                  ) -> Tuple[Lanes, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Extract up to ``num`` (<= max_tasks) heaviest tasks from this device.
+
+    Returns (lanes', bits[max_tasks, IDX_LEN], task_depth[max_tasks],
+    valid[max_tasks]).  Tasks are extracted from distinct lanes in weight
+    order (shallowest open slot first, lane id tiebreak).  Donor lanes get
+    their slot marked DELEGATED and ``donated`` incremented.
+    """
+    w, il = lanes.idx.shape
+    slots = donor_slots(lanes)
+    can = lanes.active & (slots < il)
+    # Rank donors: primary = slot depth (weight), secondary = lane id.
+    key = jnp.where(can, slots * w + jnp.arange(w, dtype=jnp.int32),
+                    jnp.int32(il * w + w))
+    order = jnp.argsort(key)                       # donor lanes, best first
+    rank = jnp.argsort(order)                      # lane -> its donor rank
+    is_donor = can & (rank < num)
+
+    new_idx_all, bits_all = jax.vmap(extract_task)(lanes.idx, slots)
+    new_idx = jnp.where(is_donor[:, None], new_idx_all, lanes.idx)
+    lanes = lanes._replace(
+        idx=new_idx, donated=lanes.donated + is_donor.astype(jnp.int32))
+
+    # Gather the first ``max_tasks`` donors' payloads in rank order.
+    sel = order[:max_tasks]
+    bits = bits_all[sel]
+    tdepth = slots[sel] + 1
+    valid = is_donor[sel]
+    bits = jnp.where(valid[:, None], bits, UNVISITED)
+    return lanes, bits.astype(jnp.int8), tdepth, valid
+
+
+def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
+                  tdepth: jnp.ndarray, valid: jnp.ndarray) -> Lanes:
+    """Give tasks to idle lanes (FIXINDEX was applied at extraction).
+
+    The k-th valid task goes to the k-th idle lane.  Receiving lanes replay
+    the index through ``Problem.apply`` (CONVERTINDEX) to rebuild their state
+    stack, then resume as owners of the stolen subtree (base = task depth).
+    """
+    w, il = lanes.idx.shape
+    n_tasks = bits.shape[0]
+    thief = ~lanes.active
+    tkey = jnp.where(thief, jnp.arange(w, dtype=jnp.int32), jnp.int32(w))
+    torder = jnp.argsort(tkey)
+    trank = jnp.argsort(torder)                    # lane -> thief rank
+    gets = thief & (trank < n_tasks)
+    src = jnp.clip(trank, 0, n_tasks - 1)
+    my_bits = bits[src]
+    my_depth = tdepth[src]
+    my_valid = valid[src] & gets
+
+    # CONVERTINDEX replay for receiving lanes (vectorized, masked).
+    replay = jax.vmap(functools.partial(replay_path, problem))
+    new_stack = replay(my_bits, my_depth, lanes.stack)
+    stack = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(
+            my_valid.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+        new_stack, lanes.stack)
+
+    idx = jnp.where(my_valid[:, None], my_bits, lanes.idx)
+    return lanes._replace(
+        idx=idx,
+        depth=jnp.where(my_valid, my_depth, lanes.depth),
+        base=jnp.where(my_valid, my_depth, lanes.base),
+        active=lanes.active | my_valid,
+        stack=stack,
+        t_s=lanes.t_s + my_valid.astype(jnp.int32),
+    )
+
+
+def balance_device(problem: BinaryProblem, lanes: Lanes) -> Lanes:
+    """One intra-device steal round: match idle lanes with heaviest donors."""
+    w = lanes.idx.shape[0]
+    idle = ~lanes.active
+    demand = jnp.sum(idle.astype(jnp.int32))
+    # Every idle lane "requests" this round (paper's T_R accounting).
+    lanes = lanes._replace(t_r=lanes.t_r + idle.astype(jnp.int32))
+    lanes, bits, tdepth, valid = extract_tasks(lanes, demand, max_tasks=w)
+    return install_tasks(problem, lanes, bits, tdepth, valid)

@@ -1,0 +1,140 @@
+"""Pallas TPU flash attention (blocked online softmax, causal/SWA/softcap).
+
+TPU-native adaptation (not a CUDA port): the kernel is expressed over a
+``(batch*kv_head, q_block, kv_block)`` grid where the *last* axis is
+sequential on TPU — the running (max, denom, accum) state lives in VMEM
+scratch across kv-block steps, and the output block is written once on the
+final step.  Block shapes are multiples of (128, 128) so the QK^T and PV
+contractions land on the MXU; masks are built from 2-D iotas (TPU requires
+>=2-D iota).
+
+Validated on CPU via ``interpret=True`` against the pure-jnp oracle
+(repro.models.attention.blocked_attention re-exported in ref.py); selected
+at runtime by ops.flash_attention(use_pallas=...).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float, window: Optional[int],
+            block_q: int, block_k: int, seq_len: int, r: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                               # [r*block_q, hd]
+    k = k_ref[0]                                  # [block_k, hd]
+    v = v_ref[0]                                  # [block_k, hd]
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [r*bq, bk]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # Positions: q rows are r repeats of block_q query positions.
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    q_pos = qi * block_q + rows % block_q
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # [r*bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: Optional[int] = None, softcap: float = 0.0,
+                    query_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, S, H, hd]; k, v: [B, S, G, hd] -> [B, S, H, hd].
+
+    The GQA group dim folds into the q block: each grid cell handles one
+    (batch, kv-head) pair with r = H // G query heads stacked block-wise.
+    """
+    b, s, h, hd = q.shape
+    g = k.shape[2]
+    r = h // g
+    scale = query_scale if query_scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+
+    # Layout: fold (B, G) into the grid's first axis; queries as
+    # [B*G, nq, r*block_q, hd] so one q block covers all r group heads.
+    qf = (q.reshape(b, s, g, r, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * g, r, s, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(b * g, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * g, s, hd)
+
+    def kv_index(bg, qi, kj):
+        return (bg, kj, 0)
+
+    # Queries pre-arranged as [B*G, nq, r*block_q, hd]: one VMEM q block
+    # covers all r heads of the group (keeps the MXU M-dim >= 128 even for
+    # small block_q).
+    qf2 = (qf.reshape(b * g, r, nq, block_q, hd).transpose(0, 2, 1, 3, 4)
+           .reshape(b * g, nq, r * block_q, hd))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, softcap=softcap,
+                          window=window, block_q=block_q, block_k=block_k,
+                          seq_len=s, r=r),
+        grid=(b * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, r * block_q, hd),
+                         lambda bg, qi, kj: (bg, qi, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r * block_q, hd),
+                               lambda bg, qi, kj: (bg, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * g, nq, r * block_q, hd),
+                                       q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((r * block_q, 1), jnp.float32),
+            pltpu.VMEM((r * block_q, 1), jnp.float32),
+            pltpu.VMEM((r * block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf2, kf, vf)
+
+    # out: [B*G, nq, r*block_q, hd] -> [B, S, H, hd]
+    o = (out.reshape(b, g, nq, r, block_q, hd).transpose(0, 2, 4, 1, 3, 5)
+         .reshape(b, s, h, hd))
+    return o

@@ -1,0 +1,69 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU (``jax.default_backend() == "tpu"``) the Pallas kernels compile
+natively; elsewhere the pure-jnp oracles run (CPU smoke/benchmarks) and
+``interpret=True`` executes the kernel bodies for correctness tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitset_degree import degree_argmax as _degree_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "query_scale",
+                                   "block_q", "block_k", "use_pallas",
+                                   "interpret"))
+def flash_attention(q, k, v, *, window: Optional[int] = None,
+                    softcap: float = 0.0,
+                    query_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash_pallas(q, k, v, window=window, softcap=softcap,
+                             query_scale=query_scale, block_q=block_q,
+                             block_k=block_k,
+                             interpret=(not _on_tpu()) if interpret is None
+                             else interpret)
+    return ref.flash_attention_ref(q, k, v, window=window, softcap=softcap,
+                                   query_scale=query_scale,
+                                   block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 64,
+             use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _ssd_pallas(x, dt, a, b, c, d, chunk=chunk,
+                           interpret=(not _on_tpu()) if interpret is None
+                           else interpret)
+    return ref.ssd_scan_ref(x, dt, a, b, c, d, chunk=chunk)
+
+
+@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
+def degree_argmax(adj, alive, *, tile: int = 128,
+                  use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _degree_pallas(adj, alive, tile=tile,
+                              interpret=(not _on_tpu()) if interpret is None
+                              else interpret)
+    return ref.degree_argmax_ref(adj, alive)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+flash_attention -> repro.models.attention.blocked_attention
+ssd_scan        -> repro.models.ssm.ssd_chunked
+bitset_degree   -> degree_argmax below (mirrors problems.vertex_cover)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blocked_attention as flash_attention_ref  # noqa: F401
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, a, b, c, d, chunk: int = 64):
+    return ssd_chunked(x, dt, a, b, c, d, chunk=chunk)
+
+
+def degree_argmax_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """adj uint32[n, w]; alive uint32[L, w] -> int32[L, 2]."""
+    n, w = adj.shape
+
+    def one(mask):
+        rows = jnp.bitwise_and(adj, mask[None, :])
+        degs = jax.lax.population_count(rows).sum(axis=1).astype(jnp.int32)
+        vid = jnp.arange(n)
+        word = vid // 32
+        bit = (vid % 32).astype(jnp.uint32)
+        is_alive = ((mask[word] >> bit) & jnp.uint32(1)) == jnp.uint32(1)
+        degs = jnp.where(is_alive, degs, jnp.int32(-1))
+        best = jnp.max(degs)
+        arg = jnp.argmax(degs).astype(jnp.int32)   # first max = smallest id
+        return jnp.stack([best, jnp.where(best < 0, jnp.int32(-1), arg)])
+
+    return jax.vmap(one)(alive)

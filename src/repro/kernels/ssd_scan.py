@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunk scan.
+
+Grid: ``(batch*head_tile, n_chunks)`` with the chunk axis sequential — the
+running inter-chunk state [N, P] per head lives in VMEM scratch, exactly
+the paper's "state passing" form of SSD.  Each grid step computes the
+intra-chunk quadratic term (decay-masked C B^T on the MXU), adds the
+contribution of the carried state, and updates the state — so the
+quadratic [Q, Q] block never leaves VMEM (the memory behavior the roofline
+kernel-adjustment models).
+
+Layout notes (TPU): heads are tiled so the trailing dims of every VMEM
+block are (multiple-of-8, 128)-friendly: Q (chunk) and N/P are 64–128 in
+the assigned configs.  Validated with interpret=True against
+repro.models.ssm.ssd_chunked (re-exported in ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref,
+            st_scr, *, chunk: int):
+    cj = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q, 1]
+    a = a_ref[0]                              # [1, 1] f32 (negative)
+    b = b_ref[0].astype(jnp.float32)          # [Q, N]
+    c = c_ref[0].astype(jnp.float32)          # [Q, N]
+    d = d_ref[0]                              # [1, 1] f32
+
+    da = dt * a[0, 0]                         # [Q, 1]
+    cum = jnp.cumsum(da, axis=0)              # [Q, 1]
+    total = cum[chunk - 1, 0]
+
+    # Intra-chunk: w[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, i >= j.
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    seg = jnp.exp(cum - cum[:, 0][None, :])   # [Q(i), Q(j)]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(ii >= jj, scores * seg * dt[:, 0][None, :], 0.0)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # Inter-chunk: y += exp(cum) * (C @ state_prev).
+    cs = c * jnp.exp(cum)                     # [Q, N]
+    y = y + jax.lax.dot_general(cs, st_scr[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + x * d[0, 0]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # State update: S = exp(total) * S + sum_j exp(total - cum_j) dt_j B_j x_j^T.
+    sb = b * (jnp.exp(total - cum) * dt)      # [Q, N]
+    upd = jax.lax.dot_general(sb, x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    st_scr[...] = st_scr[...] * jnp.exp(total) + upd
+
+    @pl.when(cj == nc - 1)
+    def _emit_state():
+        state_ref[0] = st_scr[...]
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray,
+             chunk: int = 64, interpret: bool = True
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,H,P]; dt: [B,S,H] (f32, post-softplus); a,d: [H] f32;
+    b,c: [B,S,G,N].  Returns (y [B,S,H,P], state [B,H,N,P])."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # Flatten (B, H) into the grid's first axis; expand B/C per head.
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S, 1).astype(jnp.float32)
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+    bf = bh.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    cf = ch.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    af = jnp.tile(a.astype(jnp.float32), B).reshape(B * H, 1, 1)
+    df = jnp.tile(d.astype(jnp.float32), B).reshape(B * H, 1, 1)
+
+    seq_spec = pl.BlockSpec((1, chunk, None), lambda bh_, cj: (bh_, cj, 0))
+    scal_spec = pl.BlockSpec((1, 1, 1), lambda bh_, cj: (bh_, 0, 0))
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda g, cj: (g, cj, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda g, cj: (g, cj, 0)),
+            scal_spec,
+            pl.BlockSpec((1, chunk, N), lambda g, cj: (g, cj, 0)),
+            pl.BlockSpec((1, chunk, N), lambda g, cj: (g, cj, 0)),
+            scal_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda g, cj: (g, cj, 0)),
+            pl.BlockSpec((1, N, P), lambda g, cj: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf, df)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    state = state.reshape(B, H, N, P)
+    return y, state

@@ -1,0 +1,397 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE FIRST TWO LINES (below) must run before any other import — jax locks
+the platform device count on first init.  Do NOT replicate this flag in
+conftest.py / pyproject: only the dry-run sees 512 placeholder devices.
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. constructs abstract params / optimizer / batch / cache
+     (ShapeDtypeStruct only — zero allocation);
+  3. jit(...).lower(...).compile() with explicit in/out shardings;
+  4. records memory_analysis() (fits-in-16GB proof), cost_analysis(),
+     and the trip-count-corrected roofline terms (repro.roofline);
+  5. writes one JSON artifact per cell under benchmarks/artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402  (the XLA flag must precede every jax-touching import)
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data.pipeline import input_abstract
+from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import model as M
+from repro.models.config import ArchConfig, ShapeConfig, shapes_for
+from repro.roofline import analyze_hlo, model_flops
+from repro.serve.engine import (decode_tokens_abstract, make_decode_step,
+                                make_prefill_step)
+from repro.train.optim import AdamState
+from repro.train.step import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "benchmarks", "artifacts",
+                            "dryrun")
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_ns(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: _ns(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _f32_abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(
+            a.shape, jnp.float32 if jnp.issubdtype(a.dtype, jnp.floating)
+            else a.dtype), tree)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh) -> Dict[str, P]:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    keys = ["tokens", "labels"] + (["vision"] if cfg.vision_tokens else [])
+    return {k: P(fsdp or None) for k in keys}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                perf_opts: Optional[Dict[str, Any]] = None
+                ) -> Tuple[Any, Tuple, Dict[str, Any], Any]:
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings)."""
+    perf = dict(block_q=256, block_k=256, skip_masked_blocks=False,
+                microbatches=None, seq_shard=False, kv_quant=None,
+                attn_heads_shard=True)
+    perf.update(perf_opts or {})
+    pspecs = M.specs(cfg, mesh.axis_names, M.mesh_axis_sizes(mesh))
+    p_sh = _tree_ns(mesh, pspecs)
+    b_sh = {k: _ns(mesh, v) for k, v in batch_specs(cfg, mesh).items()}
+
+    if shape.kind == "train":
+        ab_params = _f32_abstract(M.abstract(cfg))      # f32 masters
+        ab_opt = AdamState(m=_f32_abstract(M.abstract(cfg)),
+                           v=_f32_abstract(M.abstract(cfg)))
+        ab_batch = input_abstract(cfg, shape.global_batch, shape.seq_len)
+        ab_step = jax.ShapeDtypeStruct((), jnp.int32)
+        step = make_train_step(cfg, mesh,
+                               microbatches=perf.get("microbatches"),
+                               skip_masked_blocks=perf["skip_masked_blocks"],
+                               block_q=perf["block_q"],
+                               block_k=perf["block_k"],
+                               seq_shard=perf.get("seq_shard", False),
+                               attn_heads_shard=perf.get(
+                                   "attn_heads_shard", True))
+        in_sh = (p_sh, AdamState(m=p_sh, v=p_sh), b_sh, _ns(mesh, P()))
+        out_sh = (p_sh, AdamState(m=p_sh, v=p_sh),
+                  {"loss": _ns(mesh, P()), "lr": _ns(mesh, P()),
+                   "grad_norm": _ns(mesh, P())})
+        return step, (ab_params, ab_opt, ab_batch, ab_step), in_sh, out_sh
+
+    if shape.kind == "prefill":
+        ab_params = M.abstract(cfg)
+        ab_batch = input_abstract(cfg, shape.global_batch, shape.seq_len)
+        ab_batch.pop("labels")
+        bsh = {k: v for k, v in b_sh.items() if k in ab_batch}
+        step = make_prefill_step(cfg, mesh, block_q=perf["block_q"],
+                                 block_k=perf["block_k"],
+                                 skip_masked_blocks=perf["skip_masked_blocks"],
+                                 attn_heads_shard=perf.get(
+                                     "attn_heads_shard", True))
+        c_sh = _tree_ns(mesh, M.cache_specs(cfg, mesh, shape.global_batch,
+                                            shape.seq_len))
+        logits_sh = _ns(mesh, P(tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names) or None))
+        return step, (ab_params, ab_batch), (p_sh, bsh), (logits_sh, c_sh)
+
+    # decode
+    from repro.serve.engine import auto_kv_quant
+    n_dev = int(np.prod(mesh.devices.shape))
+    quant = perf.get("kv_quant")
+    if quant is None:
+        quant = auto_kv_quant(cfg, shape.global_batch, shape.seq_len, n_dev)
+    ab_params = M.abstract(cfg)
+    ab_cache = M.cache_abstract(cfg, shape.global_batch, shape.seq_len,
+                                quant=quant)
+    ab_tok = decode_tokens_abstract(cfg, shape.global_batch)
+    ab_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    c_sh = _tree_ns(mesh, M.cache_specs(cfg, mesh, shape.global_batch,
+                                        shape.seq_len, quant=quant))
+    step = make_decode_step(cfg, mesh, kv_quant=quant)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = (_ns(mesh, P(fsdp))
+             if shape.global_batch % max(np.prod(
+                 [dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                  for a in fsdp]), 1) == 0 else _ns(mesh, P()))
+    logits_sh = bspec
+    in_sh = (p_sh, c_sh, bspec, _ns(mesh, P()))
+    out_sh = (logits_sh, c_sh)
+    return step, (ab_params, ab_cache, ab_tok, ab_pos), in_sh, out_sh
+
+
+def cpu_upcast_artifact_bytes(hlo: str) -> int:
+    """Bytes of f32 buffers that are CPU-backend upcast twins.
+
+    The CPU XLA backend computes bf16 dots by converting operands to f32
+    and (under scan linearization) SAVES the converted copy per layer next
+    to the bf16 original — a buffer that cannot exist on TPU, where the
+    MXU consumes bf16 natively (verified with a minimal scan repro; no
+    flag disables it).  Detected conservatively: an op
+    ``%x = f32[dims] convert(%y: bf16[dims])`` with > 256 MB result, each
+    distinct shape counted once.  The dry-run reports raw peak AND peak
+    minus this artifact."""
+    import re as _re
+    from repro.roofline import parse_computations, _shape_dims
+    comps, _ = parse_computations(hlo)
+    seen = set()
+    total = 0
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode != "convert" or not op.result_type.startswith("f32"):
+                continue
+            dims = tuple(_shape_dims(op.result_type))
+            n = 1
+            for d in dims:
+                n *= d
+            if n * 4 <= 256 * 2 ** 20 or dims in seen:
+                continue
+            m = _re.search(r"convert\(%([\w.\-]+)\)", op.rest)
+            src = comp.symtab.get(m.group(1)) if m else None
+            if src and src.startswith("bf16") and \
+                    tuple(_shape_dims(src)) == dims:
+                seen.add(dims)
+                total += n * 4
+    total += _donated_copy_artifact_bytes(hlo, comps)
+    return total
+
+
+def _donated_copy_artifact_bytes(hlo: str, comps) -> int:
+    """CPU copy-insertion artifact for donated in-place buffers.
+
+    Donated arguments (KV caches, params) appear in the header as
+    ``input_output_alias={... may-alias ...}``; on TPU the in-place
+    dynamic-update-slice reuses the donated buffer, but the CPU scheduler
+    inserts full ``copy`` ops of the carried buffer inside the loop (one
+    resident working copy per buffer).  Detected: a copy op whose result
+    type exactly matches a may-aliased entry-parameter type; each distinct
+    type counted once."""
+    import re as _re
+    from repro.roofline import _shape_bytes
+    header = hlo.splitlines()[0] if hlo else ""
+    am = _re.search(r"input_output_alias=\{(.*)\}, entry_computation_layout",
+                    header)
+    lm = _re.search(r"entry_computation_layout=\{?\((.*?)\)->", header)
+    if not am or not lm:
+        return 0
+    params = _re.findall(r"(\w+\[[0-9,]*\])", lm.group(1))
+    aliased_idx = [int(i) for i in
+                   _re.findall(r"\((\d+), \{\}, may-alias\)", am.group(0))]
+    copied_types = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "copy":
+                copied_types.add(op.result_type.split("{")[0])
+    # one working copy per aliased buffer whose type the scheduler copies
+    # (k and v share a type string but are distinct buffers: count per
+    # aliased parameter, not per distinct type).
+    return sum(_shape_bytes(params[i]) for i in aliased_idx
+               if i < len(params) and params[i] in copied_types)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             perf_opts: Optional[Dict[str, Any]] = None,
+             save_hlo: bool = False) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = {s.name: s for s in shapes_for(cfg)}.get(shape_name)
+    if shape is None:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "quadratic attention at 500k (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    step, ab_args, in_sh, out_sh = input_specs(cfg, shape, mesh, perf_opts)
+    # Buffer donation: train donates params+opt, decode donates the cache —
+    # without it every step would double its resident state.
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*ab_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    memstats = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    counts = analyze_hlo(hlo)
+    terms = counts.terms(PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mflops = model_flops(cfg, tokens, shape.is_train)
+    hlo_flops_total = counts.flops * n_dev
+    # Dominance / roofline use the kernel-adjusted memory term (score-block
+    # traffic lives in VMEM under the Pallas kernels); the raw term is also
+    # reported so the adjustment is visible.
+    eff = {"compute_s": terms["compute_s"],
+           "memory_s": terms["memory_kernel_adj_s"],
+           "collective_s": terms["collective_s"]}
+    dominant = max(eff, key=eff.get)
+    arg_b = int(getattr(memstats, "argument_size_in_bytes", 0))
+    tmp_b = int(getattr(memstats, "temp_size_in_bytes", 0))
+    out_b = int(getattr(memstats, "output_size_in_bytes", 0))
+    alias_b = int(getattr(memstats, "alias_size_in_bytes", 0))
+    peak = arg_b + tmp_b + out_b - alias_b
+    artifact = cpu_upcast_artifact_bytes(hlo)
+    # artifacts live in temp space; never model below args+unaliased out.
+    modeled = max(peak - artifact, arg_b + out_b - alias_b)
+
+    result = {
+        "arch": arch, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "perf_opts": perf_opts or {},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": arg_b, "temp_bytes": tmp_b,
+            "output_bytes": out_b, "alias_bytes": alias_b,
+            "peak_bytes": peak,
+            "cpu_upcast_artifact_bytes": int(artifact),
+            "peak_bytes_tpu_modeled": int(modeled),
+            "fits_16GB": bool(modeled <= HBM_BYTES),
+        },
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "optimal_seconds")},
+        "roofline": {
+            "hlo_flops_per_dev": counts.flops,
+            "hbm_bytes_per_dev": counts.hbm_bytes,
+            "score_bytes_per_dev": counts.score_bytes,
+            "collective_bytes_per_dev": counts.collective_bytes,
+            "per_collective": counts.per_collective,
+            "compute_s": terms["compute_s"],
+            "memory_raw_s": terms["memory_s"],
+            "memory_s": terms["memory_kernel_adj_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": dominant,
+            "model_flops_total": mflops,
+            "useful_flops_ratio": (mflops / hlo_flops_total
+                                   if hlo_flops_total else 0.0),
+            "roofline_fraction": (
+                (mflops / n_dev / PEAK_FLOPS_BF16) / max(eff.values())
+                if max(eff.values()) > 0 else 0.0),
+        },
+    }
+    if save_hlo:
+        result["hlo_path"] = _save_hlo(arch, shape.name, multi_pod, hlo)
+    return result
+
+
+def _save_hlo(arch, shape, multi_pod, hlo) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    p = os.path.join(ARTIFACT_DIR,
+                     f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}.hlo")
+    with open(p, "w") as f:
+        f.write(hlo)
+    return p
+
+
+def artifact_path(arch: str, shape: str, multi_pod: bool,
+                  tag: str = "") -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    mesh = "mp" if multi_pod else "sp"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--block-q", type=int, default=256)
+    ap.add_argument("--block-k", type=int, default=256)
+    ap.add_argument("--skip-masked-blocks", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--kv-quant", type=int, default=None,
+                    help="1/0 override of the auto int8-KV policy")
+    ap.add_argument("--no-heads-shard", action="store_true")
+    args = ap.parse_args()
+
+    perf = {"block_q": args.block_q, "block_k": args.block_k,
+            "skip_masked_blocks": args.skip_masked_blocks,
+            "microbatches": args.microbatches,
+            "seq_shard": args.seq_shard,
+            "kv_quant": None if args.kv_quant is None else bool(args.kv_quant),
+            "attn_heads_shard": not args.no_heads_shard}
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = configs.get(arch)
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            meshes = [args.multi_pod]
+            if args.both_meshes:
+                meshes = [False, True]
+            for mp in meshes:
+                cells.append((arch, shape.name, mp))
+
+    ok = failed = 0
+    for arch, shape, mp in cells:
+        path = artifact_path(arch, shape, mp, args.tag)
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch} {shape} {'mp' if mp else 'sp'}")
+            ok += 1
+            continue
+        t0 = time.time()
+        try:
+            res = run_cell(arch, shape, mp, perf, args.save_hlo)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res.get("roofline", {})
+            mem = res.get("memory", {})
+            print(f"[ok] {arch} {shape} {'mp' if mp else 'sp'} "
+                  f"{time.time()-t0:.0f}s peak="
+                  f"{mem.get('peak_bytes', 0)/2**30:.2f}GB "
+                  f"tpu={mem.get('peak_bytes_tpu_modeled', 0)/2**30:.2f}GB "
+                  f"dominant={r.get('dominant')} "
+                  f"frac={r.get('roofline_fraction', 0):.3f}", flush=True)
+            ok += 1
+        except Exception as e:            # noqa: BLE001 — record and continue
+            failed += 1
+            print(f"[FAIL] {arch} {shape} {'mp' if mp else 'sp'}: "
+                  f"{type(e).__name__}: {e}", flush=True)
+    print(f"dry-run: {ok} ok, {failed} failed")
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

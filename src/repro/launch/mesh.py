@@ -1,0 +1,32 @@
+"""Production mesh construction (multi-pod dry-run requirement).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The single-pod mesh is
+16 x 16 = 256 chips (data, model); the multi-pod mesh is 2 x 16 x 16 = 512
+chips (pod, data, model) — the ``pod`` axis is outer data parallelism for
+LM steps and the outer steal ring for the solver.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per chip per hop)
+HBM_BYTES = 16 * 2 ** 30          # 16 GB per chip

@@ -1,0 +1,1 @@
+"""LM substrate: model families for the assigned architectures."""

@@ -1,0 +1,296 @@
+"""Blocked causal attention (GQA / RoPE / SWA / softcap) in pure lax.
+
+The prefill/train path is a *blocked online-softmax* (flash-style) scan:
+outer ``lax.scan`` over query blocks, inner ``lax.scan`` over KV blocks with
+f32 running (max, sum, acc).  Peak memory is O(block_q · block_k) scores per
+(batch, head) instead of O(S²) — this is what makes 32k-token prefill
+lowerable on a 16 GB chip, and it is the jnp oracle for the Pallas kernel in
+``repro.kernels.flash_attention``.
+
+``skip_masked_blocks`` gates fully-masked KV blocks behind ``lax.cond`` so
+they cost no FLOPs (causal ⇒ ~half the blocks; SWA ⇒ all but O(window)).
+It is OFF in the paper-faithful baseline and turned on as a §Perf iteration —
+EXPERIMENTS.md records the before/after.
+
+Decode (one query token against a cache) is a single masked softmax.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-fraction capable, glm4 rotates only half the head dim).
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, fraction: float,
+                theta: float):
+    """cos/sin tables [..., rot/2] for the rotated prefix of the head dim."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., rot/2]
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rot: int) -> jnp.ndarray:
+    """x: [B, S, H, hd]; cos/sin: [B, S, rot/2] (broadcast over heads)."""
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c, s = cos[..., None, :], sin[..., None, :]               # head axis
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    # Cast back to the input dtype BEFORE assembling the output so the
+    # materialized K/Q buffers are bf16 (XLA otherwise stores the f32
+    # intermediates and defers the cast into every consumer).
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention.
+# ---------------------------------------------------------------------------
+
+
+class _Acc(NamedTuple):
+    m: jnp.ndarray      # f32 [B, G, R, Q]   running max
+    l: jnp.ndarray      # f32 [B, G, R, Q]   running denominator
+    o: jnp.ndarray      # f32 [B, G, R, Q, hd] running numerator
+
+
+def _block_scores(qb, kb, scale, softcap):
+    # qb [B, Q, G, R, hd], kb [B, K, G, hd] -> s [B, G, R, Q, K] (f32).
+    # bf16 inputs with an f32 accumulator (preferred_element_type): casting
+    # operands to f32 first would materialize f32 copies of every KV block
+    # in HBM — the MXU takes bf16 in / f32 out natively.
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _mask(qpos, kpos, window: Optional[int]):
+    ok = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return ok                                               # [Q, K]
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      window: Optional[int] = None,
+                      softcap: float = 0.0,
+                      query_scale: Optional[float] = None,
+                      q_offset: int = 0,
+                      block_q: int = 256,
+                      block_k: int = 256,
+                      skip_masked_blocks: bool = False) -> jnp.ndarray:
+    """Causal attention.  q: [B, S, H, hd]; k, v: [B, S, G, hd]; returns
+    [B, S, H, hd].  H = G * R (GQA).  S must divide by the block sizes
+    (configs pick divisors; shapes here are powers of two)."""
+    b, s_orig, h, hd = q.shape
+    g = k.shape[2]
+    r = h // g
+    scale = query_scale if query_scale is not None else 1.0 / math.sqrt(hd)
+
+    # Pad the sequence to the block grid; padded KV positions sit *beyond*
+    # every real query position, so the causal mask removes them.
+    blk = block_q * block_k // math.gcd(block_q, block_k)   # lcm
+    pad = (-s_orig) % blk
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+    s = s_orig + pad
+    nq, nk = s // block_q, s // block_k
+
+    qb = q.reshape(b, nq, block_q, g, r, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, block_k, g, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_k, g, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        # rematerialized (Rabe–Staats): without this, the scan VJP stacks a
+        # [nk, B, G, R, bq, bk] residual per q block — O(S^2) HBM traffic
+        # and memory in the backward.  Recomputing the score block in the
+        # backward keeps residuals at O(block) (the flash-attention trade).
+        @jax.checkpoint
+        def kv_step(acc: _Acc, kj_blk):
+            kj, kblk, vblk = kj_blk
+            k_pos = kj * block_k + jnp.arange(block_k)
+
+            def compute(acc):
+                sblk = _block_scores(qblk, kblk, scale, softcap)
+                ok = _mask(q_pos, k_pos, window)             # [Q, K]
+                sblk = jnp.where(ok[None, None, None], sblk, NEG_INF)
+                m_new = jnp.maximum(acc.m, sblk.max(axis=-1))
+                p = jnp.exp(sblk - m_new[..., None])
+                alpha = jnp.exp(acc.m - m_new)
+                l_new = acc.l * alpha + p.sum(axis=-1)
+                # p in bf16 for the PV matmul (values <= 1; f32 accumulate)
+                # — the flash-kernel convention, and it avoids an f32 copy
+                # of the V block.
+                pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v.dtype), vblk,
+                                preferred_element_type=jnp.float32)
+                o_new = acc.o * alpha[..., None] + pv
+                return _Acc(m_new, l_new, o_new)
+
+            if skip_masked_blocks:
+                # Block is fully masked iff its smallest q position cannot
+                # see its smallest k position (causal) or its largest k
+                # position is out of the window for every q in the block.
+                first_q = q_offset + qi * block_q
+                last_q = first_q + block_q - 1
+                first_k = kj * block_k
+                last_k = first_k + block_k - 1
+                live = first_k <= last_q
+                if window is not None:
+                    live &= (last_k > first_q - window)
+                acc = jax.lax.cond(live, compute, lambda a: a, acc)
+            else:
+                acc = compute(acc)
+            return acc, None
+
+        acc0 = _Acc(
+            m=jnp.full((b, g, r, block_q), NEG_INF, jnp.float32),
+            l=jnp.zeros((b, g, r, block_q), jnp.float32),
+            o=jnp.zeros((b, g, r, block_q, hd), jnp.float32),
+        )
+        acc, _ = jax.lax.scan(
+            kv_step, acc0, (jnp.arange(nk), kb, vb))
+        out = acc.o / jnp.maximum(acc.l, 1e-30)[..., None]
+        # [B, G, R, Q, hd] -> [B, Q, H, hd]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, block_q, h, hd)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return out[:, :s_orig]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     softcap: float = 0.0,
+                     query_scale: Optional[float] = None,
+                     k_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, S, G, hd]; pos: [] or [B] — the number of
+    valid cache entries (the new token's position).  ``k_positions`` gives
+    the absolute position held by each cache slot (rolling-window caches);
+    defaults to arange(S).  Returns [B, 1, H, hd].
+    """
+    b, _, h, hd = q.shape
+    s, g = k_cache.shape[1], k_cache.shape[2]
+    r = h // g
+    scale = query_scale if query_scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(b, 1, g, r, hd)
+    sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k_cache.astype(qh.dtype),
+                    preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        sc = softcap * jnp.tanh(sc / softcap)
+    kpos = jnp.arange(s) if k_positions is None else k_positions
+    posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    # kpos < 0 marks unwritten rolling-cache slots — always invalid.
+    ok = (kpos[None, :] <= posb[:, None]) & (kpos[None, :] >= 0)  # [B, S]
+    if window is not None:
+        ok &= (posb[:, None] - kpos[None, :]) < window
+    sc = jnp.where(ok[:, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(q.dtype),
+                     v_cache.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV cache (serving): per-(token, head) absmax scales.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jnp.ndarray):
+    """x: [..., hd] bf16 -> (int8[..., hd], f32[..., 1] scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q8.astype(jnp.int8), scale
+
+
+def decode_attention_quant(q: jnp.ndarray, k8: jnp.ndarray, v8: jnp.ndarray,
+                           ks: jnp.ndarray, vs: jnp.ndarray,
+                           pos: jnp.ndarray, *,
+                           window: Optional[int] = None,
+                           softcap: float = 0.0,
+                           query_scale: Optional[float] = None,
+                           k_positions: Optional[jnp.ndarray] = None,
+                           block: int = 2048) -> jnp.ndarray:
+    """One-token attention over an int8 cache, dequantized block-by-block
+    with an online softmax so the full-cache bf16 copy never materializes
+    (flash-decoding structure).  q: [B,1,H,hd]; k8/v8: [B,S,G,hd] int8;
+    ks/vs: [B,S,G,1] f32."""
+    b, _, h, hd = q.shape
+    s, g = k8.shape[1], k8.shape[2]
+    r = h // g
+    scale = query_scale if query_scale is not None else 1.0 / math.sqrt(hd)
+    block = min(block, s)
+    nb = s // block if s % block == 0 else -(-s // block)
+    pad = nb * block - s
+    kpos = jnp.arange(s) if k_positions is None else k_positions
+    if pad:
+        k8 = jnp.pad(k8, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v8 = jnp.pad(v8, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    qh = q.reshape(b, 1, g, r, hd)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
+
+    def body(acc, j):
+        m_p, l_p, o_p = acc
+        # dynamic_slice (not a reshaped/transposed scan xs): a transposed
+        # xs would materialize a full copy of the int8 cache as a temp.
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, j * block, block, 1)
+        k8_, v8_, ks_, vs_ = sl(k8), sl(v8), sl(ks), sl(vs)
+        kp_ = jax.lax.dynamic_slice_in_dim(kpos, j * block, block, 0)
+        kb = (k8_.astype(jnp.bfloat16)
+              * ks_.astype(jnp.bfloat16))                  # [B,blk,G,hd]
+        sc = jnp.einsum("bqgrd,bkgd->bgrqk", qh, kb,
+                        preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            sc = softcap * jnp.tanh(sc / softcap)
+        ok = (kp_[None, :] <= posb[:, None]) & (kp_[None, :] >= 0)
+        if window is not None:
+            ok &= (posb[:, None] - kp_[None, :]) < window
+        sc = jnp.where(ok[:, None, None, None, :], sc, NEG_INF)
+        m_n = jnp.maximum(m_p, sc.max(axis=-1))
+        p = jnp.exp(sc - m_n[..., None])
+        alpha = jnp.exp(m_p - m_n)
+        l_n = l_p * alpha + p.sum(axis=-1)
+        vb = (v8_.astype(jnp.bfloat16) * vs_.astype(jnp.bfloat16))
+        pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(jnp.bfloat16), vb,
+                        preferred_element_type=jnp.float32)
+        o_n = o_p * alpha[..., None] + pv
+        return (m_n, l_n, o_n), None
+
+    acc0 = (jnp.full((b, g, r, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, g, r, 1), jnp.float32),
+            jnp.zeros((b, g, r, 1, hd), jnp.float32))
+    (m, l, o), _ = jax.lax.scan(body, acc0, jnp.arange(nb))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

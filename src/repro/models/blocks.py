@@ -1,0 +1,289 @@
+"""Layer blocks for every assigned architecture family.
+
+A model is a scan over *layer groups* (repro.models.model).  Grouping keeps
+heterogeneous stacks scan-able with exact HLO trip counts — no lax.cond in
+the layer path, which keeps the roofline accounting honest:
+
+  dense / moe / vlm / audio : group = 1 transformer layer
+  gemma2 (alternating)      : group = (local layer, global layer)
+  ssm (mamba2)              : group = 1 mamba layer
+  hybrid (zamba2)           : group = shared attn/mlp block + P mamba layers
+
+Each block body supports three modes:
+  train / prefill : full-sequence, blocked attention / chunked SSD;
+                    prefill additionally emits cache entries;
+  decode          : one token against a cache (KV, rolling-window KV, or
+                    SSM state + conv tail).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssd
+from repro.models.attention import (apply_rope, blocked_attention,
+                                    decode_attention,
+                                    decode_attention_quant, quantize_kv,
+                                    rope_tables)
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_mlp, attn_decls, mlp_decls, norm_decl,
+                                 rmsnorm)
+from repro.models.moe import moe_decls, moe_ffn
+from repro.models.params import ParamDecl
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context threaded through the blocks."""
+    cfg: ArchConfig
+    mode: str                               # train | prefill | decode
+    pos: Optional[jnp.ndarray] = None       # decode: current position []
+    shard: Callable[[jnp.ndarray, Tuple], jnp.ndarray] = lambda x, s: x
+    block_q: int = 256
+    block_k: int = 256
+    skip_masked_blocks: bool = False
+    moe_shard_map: Optional[Callable] = None   # wraps moe_ffn when sharded
+    kv_quant: bool = False                  # int8 KV cache (serving)
+
+    @property
+    def decode(self) -> bool:
+        return self.mode == "decode"
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer (shared by dense/moe/vlm/audio/gemma2/zamba2-shared).
+# ---------------------------------------------------------------------------
+
+
+def attention_sublayer(p: Dict[str, jnp.ndarray], h: jnp.ndarray, ctx: Ctx,
+                       window: Optional[int],
+                       cache: Optional[Dict[str, jnp.ndarray]] = None,
+                       ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """h -> (attn_out, new_cache).  Cache dict: {"k","v"} [B, Sc, G, hd]
+    (+ implicit rolling layout when Sc < full sequence)."""
+    cfg = ctx.cfg
+    b, s, _ = h.shape
+    hn, g, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, hn, hd)
+    k = k.reshape(b, s, g, hd)
+    v = v.reshape(b, s, g, hd)
+    q = ctx.shard(q, ("batch", None, "heads", None))
+    k = ctx.shard(k, ("batch", None, "kv", None))
+    v = ctx.shard(v, ("batch", None, "kv", None))
+
+    if ctx.decode:
+        positions = jnp.full((b, 1), ctx.pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cos, sin, rot = rope_tables(positions, hd, cfg.rope_fraction,
+                                cfg.rope_theta)
+    q = apply_rope(q, cos, sin, rot)
+    k = apply_rope(k, cos, sin, rot)
+
+    new_cache = None
+    if ctx.decode:
+        assert cache is not None
+        sc = cache["k"].shape[1]
+        slot = (ctx.pos % sc).astype(jnp.int32)
+
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), slot, axis=1)
+
+        # Rolling layout: slot i holds position pos - ((pos - i) mod Sc).
+        # For a full-length cache (pos < Sc) this reduces to kpos = i for
+        # i <= pos and a negative (masked-out) value for unwritten slots,
+        # so the same formula serves both cache kinds.
+        idx = jnp.arange(sc)
+        kpos = ctx.pos - ((ctx.pos - idx) % sc)
+        if ctx.kv_quant:
+            k8, ksc = quantize_kv(k)
+            v8, vsc = quantize_kv(v)
+            new_cache = {"k": upd(cache["k"], k8), "v": upd(cache["v"], v8),
+                         "ks": upd(cache["ks"], ksc),
+                         "vs": upd(cache["vs"], vsc)}
+            attn = decode_attention_quant(
+                q, new_cache["k"], new_cache["v"], new_cache["ks"],
+                new_cache["vs"], ctx.pos, window=window,
+                softcap=cfg.attn_softcap, query_scale=cfg.query_scale,
+                k_positions=kpos)
+        else:
+            k_cache = upd(cache["k"], k)
+            v_cache = upd(cache["v"], v)
+            new_cache = {"k": k_cache, "v": v_cache}
+            attn = decode_attention(
+                q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                ctx.pos, window=window, softcap=cfg.attn_softcap,
+                query_scale=cfg.query_scale, k_positions=kpos)
+    else:
+        attn = blocked_attention(
+            q, k, v, window=window, softcap=cfg.attn_softcap,
+            query_scale=cfg.query_scale, block_q=min(ctx.block_q, s),
+            block_k=min(ctx.block_k, s),
+            skip_masked_blocks=ctx.skip_masked_blocks)
+        if ctx.mode == "prefill":
+            keep = window if (window is not None and window < s) else s
+            kk, vv = k[:, -keep:, :, :], v[:, -keep:, :, :]
+            if ctx.kv_quant:
+                k8, ksc = quantize_kv(kk)
+                v8, vsc = quantize_kv(vv)
+                new_cache = {"k": k8, "v": v8, "ks": ksc, "vs": vsc}
+            else:
+                new_cache = {"k": kk, "v": vv}
+
+    attn = attn.reshape(b, s, hn * hd)
+    out = attn @ p["wo"]
+    return ctx.shard(out, ("batch", "seq_res", "embed_act")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Transformer layer (attention + MLP/MoE) — dense, moe, vlm, audio, gemma2.
+# ---------------------------------------------------------------------------
+
+
+def transformer_decls(cfg: ArchConfig, use_moe: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    gstyle = cfg.post_norms
+    decls: Dict[str, Any] = {"attn": attn_decls(cfg)}
+    decls["ln1"] = norm_decl(d) if not gstyle else _zero_norm(d)
+    decls["ln2"] = norm_decl(d) if not gstyle else _zero_norm(d)
+    if gstyle:
+        decls["ln1_post"] = _zero_norm(d)
+        decls["ln2_post"] = _zero_norm(d)
+    if use_moe:
+        decls["moe"] = moe_decls(d, cfg.moe)
+    else:
+        decls["mlp"] = mlp_decls(d, cfg.d_ff, cfg.mlp_gated)
+    return decls
+
+
+def _zero_norm(d: int) -> ParamDecl:
+    # gemma-style scale is (1 + w): init w = 0.
+    return ParamDecl((d,), ("embed",), init="zeros")
+
+
+def apply_transformer_layer(p: Dict[str, Any], h: jnp.ndarray, ctx: Ctx,
+                            window: Optional[int],
+                            cache: Optional[Dict] = None,
+                            ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    cfg = ctx.cfg
+    gstyle = cfg.post_norms
+    hn = rmsnorm(h, p["ln1"], cfg.norm_eps, gemma_style=gstyle)
+    attn, new_cache = attention_sublayer(p["attn"], hn, ctx, window, cache)
+    if gstyle:
+        attn = rmsnorm(attn, p["ln1_post"], cfg.norm_eps, gemma_style=True)
+    h = h + attn
+
+    hn = rmsnorm(h, p["ln2"], cfg.norm_eps, gemma_style=gstyle)
+    if "moe" in p:
+        b, s, d = hn.shape
+        x2d = hn.reshape(b * s, d)
+        fn = ctx.moe_shard_map or (
+            lambda x, prm: moe_ffn(x, prm, cfg.moe))
+        ff = fn(x2d, p["moe"]).reshape(b, s, d)
+    else:
+        ff = apply_mlp(p["mlp"], hn, cfg.mlp_gated)
+    if gstyle:
+        ff = rmsnorm(ff, p["ln2_post"], cfg.norm_eps, gemma_style=True)
+    h = h + ff
+    return ctx.shard(h, ("batch", "seq_res", "embed_act")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 layer (ssm family and the hybrid backbone).
+# ---------------------------------------------------------------------------
+
+
+def mamba_decls(cfg: ArchConfig) -> Dict[str, ParamDecl]:
+    s = cfg.ssm
+    d, din, gn, hh = cfg.d_model, s.d_inner, s.n_groups * s.d_state, s.n_heads
+    conv_dim = din + 2 * gn
+    return {
+        "ln": norm_decl(d),
+        "wz": ParamDecl((d, din), ("embed", "mlp")),
+        "wx": ParamDecl((d, din), ("embed", "mlp")),
+        "wb": ParamDecl((d, gn), ("embed", None)),
+        "wc": ParamDecl((d, gn), ("embed", None)),
+        "wdt": ParamDecl((d, hh), ("embed", None)),
+        "conv_w": ParamDecl((s.d_conv, conv_dim), ("conv", None)),
+        "conv_b": ParamDecl((conv_dim,), (None,), init="zeros"),
+        "dt_bias": ParamDecl((hh,), (None,), jnp.float32, init="ssm_dt"),
+        "a_log": ParamDecl((hh,), (None,), jnp.float32, init="ssm_a"),
+        "d_skip": ParamDecl((hh,), (None,), jnp.float32, init="ones"),
+        "gnorm": ParamDecl((din,), ("mlp",), init="ones"),
+        "out_proj": ParamDecl((din, d), ("mlp", "embed")),
+    }
+
+
+def apply_mamba_layer(p: Dict[str, jnp.ndarray], h: jnp.ndarray, ctx: Ctx,
+                      cache: Optional[Dict[str, jnp.ndarray]] = None,
+                      ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """cache: {"state": [B,H,N,P], "conv": [B,K-1,conv_dim]}."""
+    cfg = ctx.cfg
+    s = cfg.ssm
+    b, sl, _ = h.shape
+    din, gn = s.d_inner, s.n_groups * s.d_state
+    hh, pp, nn, gg = s.n_heads, s.head_dim, s.d_state, s.n_groups
+
+    hn = rmsnorm(h, p["ln"], cfg.norm_eps)
+    z = hn @ p["wz"]
+    xbc_pre = jnp.concatenate(
+        [hn @ p["wx"], hn @ p["wb"], hn @ p["wc"]], axis=-1)
+    dt_raw = hn @ p["wdt"]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    new_cache = None
+
+    if ctx.decode:
+        assert cache is not None
+        xbc_t, conv_tail = ssd.causal_conv_step(
+            cache["conv"], xbc_pre[:, 0, :], p["conv_w"])
+        xbc_t = jax.nn.silu((xbc_t + p["conv_b"]).astype(jnp.float32)
+                            ).astype(h.dtype)
+        x_t = xbc_t[:, :din].reshape(b, hh, pp)
+        b_t = xbc_t[:, din:din + gn].reshape(b, gg, nn)
+        c_t = xbc_t[:, din + gn:].reshape(b, gg, nn)
+        dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32)
+                             + p["dt_bias"])
+        y_t, state = ssd.ssd_decode_step(
+            cache["state"], x_t, dt, a, b_t, c_t, p["d_skip"])
+        y = y_t.reshape(b, 1, din)
+        new_cache = {"state": state, "conv": conv_tail}
+    else:
+        xbc = ssd.causal_conv(xbc_pre, p["conv_w"])
+        xbc = jax.nn.silu((xbc + p["conv_b"]).astype(jnp.float32)
+                          ).astype(h.dtype)
+        x = xbc[..., :din].reshape(b, sl, hh, pp)
+        bmat = xbc[..., din:din + gn].reshape(b, sl, gg, nn)
+        cmat = xbc[..., din + gn:].reshape(b, sl, gg, nn)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        y, state = ssd.ssd_chunked(x, dt, a, bmat, cmat, p["d_skip"],
+                                   chunk=min(s.chunk, sl))
+        y = y.reshape(b, sl, din)
+        if ctx.mode == "prefill":
+            # conv tail = last K-1 *pre-activation* conv inputs.
+            k = s.d_conv
+            new_cache = {"state": state, "conv": xbc_pre[:, -(k - 1):, :]}
+
+    if ctx.decode:
+        zg = z[:, :1, :]
+    else:
+        zg = z
+    y = rmsnorm(y * jax.nn.silu(zg.astype(jnp.float32)).astype(zg.dtype),
+                p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return ctx.shard(h + out, ("batch", "seq_res", "embed_act")), new_cache

@@ -1,0 +1,68 @@
+"""Shared primitive layers: RMSNorm, gated MLP, embeddings.
+
+All matmuls run in bf16 with f32 accumulation where it matters (norms,
+softmax, losses are f32).  Parameter declarations carry logical axes
+consumed by repro.models.params.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamDecl
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float,
+            gemma_style: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    norm = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if gemma_style \
+        else w.astype(jnp.float32)
+    return (norm * scale).astype(x.dtype)
+
+
+def mlp_decls(d_model: int, d_ff: int, gated: bool) -> Dict[str, ParamDecl]:
+    if gated:
+        return {
+            "w1": ParamDecl((d_model, d_ff), ("embed", "mlp")),
+            "w3": ParamDecl((d_model, d_ff), ("embed", "mlp")),
+            "w2": ParamDecl((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w1": ParamDecl((d_model, d_ff), ("embed", "mlp")),
+        "w2": ParamDecl((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              gated: bool) -> jnp.ndarray:
+    if gated:
+        h = (jax.nn.silu((x @ p["w1"]).astype(jnp.float32)).astype(x.dtype)
+             * (x @ p["w3"]))
+    else:
+        h = jax.nn.gelu((x @ p["w1"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w2"]
+
+
+def attn_decls(cfg: ArchConfig) -> Dict[str, ParamDecl]:
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    decls = {
+        "wq": ParamDecl((d, h * hd), ("embed", "heads")),
+        "wk": ParamDecl((d, g * hd), ("embed", "kv")),
+        "wv": ParamDecl((d, g * hd), ("embed", "kv")),
+        "wo": ParamDecl((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        decls["bq"] = ParamDecl((h * hd,), ("heads",), init="zeros")
+        decls["bk"] = ParamDecl((g * hd,), ("kv",), init="zeros")
+        decls["bv"] = ParamDecl((g * hd,), ("kv",), init="zeros")
+    return decls
+
+
+def norm_decl(d: int) -> ParamDecl:
+    return ParamDecl((d,), ("embed",), init="ones")

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-free capacity dispatch.
+
+Design (TPU production pattern, not the GShard one-hot einsum — that one is
+O(T²) in dispatch FLOPs at 32k context):
+
+  1. router logits (f32) -> top_k experts + softmax-over-selected weights;
+  2. *sort-free* slotting: a token's slot inside its expert buffer is the
+     running count of earlier (token, choice) pairs that picked the same
+     expert — one cumsum over a [T*k, E] one-hot, no argsort;
+  3. gather tokens into [E, C, D] buffers (capacity C, first-come priority,
+     overflow dropped — tests use a lossless capacity factor);
+  4. two batched GEMMs over the expert dim (gated SwiGLU);
+  5. combine: gather each (token, choice) result and weighted-sum.
+
+Distribution: the surrounding model wraps :func:`moe_ffn` in ``shard_map``
+(see repro.models.model) so dispatch indices stay *local* to each data
+shard — the cross-device semantics of GSPMD scatter/gather never trigger.
+Expert weights are stored [E, D, F] sharded D->data (ZeRO-3) and F->model
+(TP); the body all-gathers D (ZeRO gather), computes with local F, and
+psums the output over the model axis.  MoE's data-dependent load imbalance
+is the same disease the paper's framework treats for search trees — noted
+in DESIGN.md §Arch-applicability; capacity + first-come dropping is the
+static-shape answer here.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.params import ParamDecl
+
+
+def moe_decls(d_model: int, cfg: MoEConfig) -> Dict[str, ParamDecl]:
+    e, f = cfg.num_experts, cfg.d_ff
+    decls = {
+        "router": ParamDecl((d_model, e), ("embed", None), jnp.float32),
+        "w1": ParamDecl((e, d_model, f), ("experts", "embed", "mlp")),
+        "w3": ParamDecl((e, d_model, f), ("experts", "embed", "mlp")),
+        "w2": ParamDecl((e, f, d_model), ("experts", "mlp", "embed")),
+    }
+    if cfg.shared_expert_ff:
+        s = cfg.shared_expert_ff
+        decls["ws1"] = ParamDecl((d_model, s), ("embed", "mlp"))
+        decls["ws3"] = ParamDecl((d_model, s), ("embed", "mlp"))
+        decls["ws2"] = ParamDecl((s, d_model), ("mlp", "embed"))
+    return decls
+
+
+def route(x2d: jnp.ndarray, router: jnp.ndarray, cfg: MoEConfig
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x2d: [T, D] -> (experts [T, k] int32, weights [T, k] f32)."""
+    logits = x2d.astype(jnp.float32) @ router          # [T, E]
+    if cfg.router_softcap > 0.0:
+        logits = cfg.router_softcap * jnp.tanh(logits / cfg.router_softcap)
+    top_vals, top_idx = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(top_vals, axis=-1)
+    return top_idx.astype(jnp.int32), weights
+
+
+def capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(num_tokens * cfg.top_k * cfg.capacity_factor
+                  / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)                      # round up to 8
+
+
+def moe_ffn(x2d: jnp.ndarray, params: Dict[str, jnp.ndarray],
+            cfg: MoEConfig, *, tp_axis: Optional[str] = None,
+            zero_axes: Optional[Tuple[str, ...]] = None) -> jnp.ndarray:
+    """Apply the MoE FFN to [T, D] tokens (local shard inside shard_map,
+    or the whole batch when unsharded).
+
+    tp_axis:   mesh axis name the F dim of w1/w3/w2 is sharded over (psum
+               the output over it); None = no TP.
+    zero_axes: mesh axes the D dim is stored-sharded over (ZeRO-3);
+               all-gathered here before compute.  None = already full.
+    """
+    t, d_local = x2d.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    w1, w3, w2 = params["w1"], params["w3"], params["w2"]
+    router = params["router"]
+    if zero_axes:
+        # ZeRO-3 gather of the D (contraction) dim; grads reduce-scatter back.
+        for ax in zero_axes:
+            w1 = _allgather_dim(w1, 1, ax)
+            w3 = _allgather_dim(w3, 1, ax)
+            w2 = _allgather_dim(w2, 2, ax)
+            router = _allgather_dim(router, 0, ax)
+
+    experts, weights = route(x2d, router, cfg)          # [T,k], [T,k]
+
+    # --- sort-free slotting -------------------------------------------------
+    flat_e = experts.reshape(t * k)                     # token-major order
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # [T*k, E]
+    slot = (jnp.cumsum(onehot, axis=0) - onehot)        # prior same-expert
+    flat_slot = jnp.take_along_axis(slot, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_slot < c
+
+    # --- dispatch gather indices: buffer[e, s] = token id (or T = pad row) --
+    tok_of_pair = jnp.arange(t * k, dtype=jnp.int32) // k
+    write_pos = flat_e * (c + 1) + jnp.where(keep, flat_slot, c)
+    buf_tok = jnp.full((e * (c + 1),), t, jnp.int32)
+    buf_tok = buf_tok.at[write_pos].set(tok_of_pair, mode="drop")
+    buf_tok = buf_tok.reshape(e, c + 1)[:, :c]          # [E, C]
+
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d_local), x2d.dtype)], 0)
+    xe = x_pad[buf_tok]                                 # [E, C, D]
+
+    # --- expert GEMMs (batched over E; F possibly TP-sharded) --------------
+    h1 = jnp.einsum("ecd,edf->ecf", xe, w1)
+    h3 = jnp.einsum("ecd,edf->ecf", xe, w3)
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(h3.dtype) * h3
+    # [E, C, D], PARTIAL over the F (tp) shards.  The psum happens after
+    # the combine: combine is linear, and reducing [T, D] moves
+    # top_k*capacity_factor (2.5x) fewer bytes than reducing [E, C, D]
+    # (§Perf iteration, EXPERIMENTS.md).
+    ye = jnp.einsum("ecf,efd->ecd", h, w2)
+
+    # --- combine ------------------------------------------------------------
+    read_pos = flat_e * c + jnp.clip(flat_slot, 0, c - 1)
+    y_flat = ye.reshape(e * c, d_local)
+    y_pairs = y_flat[read_pos]                          # [T*k, D]
+    y_pairs = jnp.where(keep[:, None], y_pairs, 0).reshape(t, k, d_local)
+    out = jnp.einsum("tkd,tk->td", y_pairs.astype(jnp.float32), weights)
+
+    # --- shared (always-on) expert ------------------------------------------
+    if cfg.shared_expert_ff:
+        ws1, ws3, ws2 = params["ws1"], params["ws3"], params["ws2"]
+        if zero_axes:
+            for ax in zero_axes:
+                ws1 = _allgather_dim(ws1, 0, ax)
+                ws3 = _allgather_dim(ws3, 0, ax)
+                ws2 = _allgather_dim(ws2, 1, ax)
+        hs = (jax.nn.silu((x2d @ ws1).astype(jnp.float32)).astype(x2d.dtype)
+              * (x2d @ ws3))
+        ys = hs @ ws2                       # partial over tp (F shards)
+        out = out + ys.astype(jnp.float32)
+
+    if tp_axis is not None:
+        # single bf16 all-reduce of [T, D] (routed + shared partials).
+        out = jax.lax.psum(out.astype(jnp.bfloat16), tp_axis)
+    return out.astype(x2d.dtype)
+
+
+def _allgather_dim(x: jnp.ndarray, dim: int, axis_name: str) -> jnp.ndarray:
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def moe_ffn_dense_reference(x2d: jnp.ndarray, params: Dict[str, jnp.ndarray],
+                            cfg: MoEConfig) -> jnp.ndarray:
+    """Oracle: run EVERY expert densely on every token, then mix by router
+    weight.  Exponentially wasteful but unambiguous — tests compare moe_ffn
+    (lossless capacity) against this."""
+    experts, weights = route(x2d, params["router"], cfg)
+    h1 = jnp.einsum("td,edf->tef", x2d, params["w1"])
+    h3 = jnp.einsum("td,edf->tef", x2d, params["w3"])
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(h3.dtype) * h3
+    y = jnp.einsum("tef,efd->ted", h, params["w2"])     # [T, E, D]
+    t = x2d.shape[0]
+    out = jnp.zeros((t, x2d.shape[1]), jnp.float32)
+    for j in range(cfg.top_k):
+        sel = y[jnp.arange(t), experts[:, j]]           # [T, D]
+        out = out + weights[:, j:j + 1] * sel.astype(jnp.float32)
+    if cfg.shared_expert_ff:
+        hs = (jax.nn.silu((x2d @ params["ws1"]).astype(jnp.float32))
+              .astype(x2d.dtype) * (x2d @ params["ws3"]))
+        out = out + (hs @ params["ws2"]).astype(jnp.float32)
+    return out.astype(x2d.dtype)

@@ -1,0 +1,143 @@
+"""Declarative parameters: one definition -> real init / abstract / shardings.
+
+A module's parameters are declared as a pytree of :class:`ParamDecl` (shape,
+dtype, initializer, *logical axes*).  Three materializers consume the tree:
+
+* ``init_params``     — real jnp arrays (smoke tests, examples);
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` stand-ins (dry-run: no
+  allocation, the pattern the multi-pod compile check requires);
+* ``param_specs``     — ``PartitionSpec`` per leaf, from logical-axis ->
+  mesh-axis rules (the framework's sharding-rule table, MaxText-style).
+
+Logical axes used by the LM substrate:
+
+  embed   — d_model dim            -> FSDP axis ("data"[, "pod"])  (ZeRO-3)
+  heads   — fused q/o head dim     -> TP axis ("model")
+  kv      — fused kv head dim      -> TP axis ("model")
+  mlp     — feed-forward hidden    -> TP axis ("model")
+  vocab   — vocabulary             -> TP axis ("model")
+  experts — MoE expert count       -> replicated (E ∤ 16; F/D carry TP/FSDP)
+  layers  — scan-stacked layer dim -> replicated (scan carry)
+  None    — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"        # normal | zeros | ones | ssm_a | ssm_dt
+    fan_in: Optional[int] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_leaf(decl: ParamDecl, key) -> jnp.ndarray:
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, decl.dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, decl.dtype)
+    if decl.init == "ssm_a":      # mamba2: A = -exp(uniform log) in [1,16]
+        u = jax.random.uniform(key, decl.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(decl.dtype)
+    if decl.init == "ssm_dt":     # dt bias: softplus^-1 of U(1e-3, 1e-1)
+        u = jax.random.uniform(key, decl.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(decl.dtype)
+    fan_in = decl.fan_in or (decl.shape[-2] if len(decl.shape) >= 2
+                             else decl.shape[-1])
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, decl.shape, jnp.float32) * std
+            ).astype(decl.dtype)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def init_params(decls: PyTree, key) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(decls, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(decls: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls,
+        is_leaf=is_decl)
+
+
+#: logical axis -> mesh axes (None = replicated).  ``fsdp`` covers both the
+#: single-pod ("data",) and multi-pod ("pod", "data") cases.
+def default_rules(mesh_axis_names: Sequence[str]) -> Dict[str, Any]:
+    fsdp: Any = tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+    if not fsdp:
+        fsdp = None
+    tp = "model" if "model" in mesh_axis_names else None
+    return {
+        "embed": fsdp,
+        "heads": tp,
+        "kv": tp,
+        "mlp": tp,
+        "vocab": tp,
+        "experts": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+    }
+
+
+def spec_for(decl: ParamDecl, rules: Dict[str, Any],
+             axis_sizes: Optional[Dict[str, int]] = None) -> P:
+    """PartitionSpec for one param.  A logical->mesh mapping is dropped when
+    (a) the mesh axis is already used by another dim of this param, or
+    (b) ``axis_sizes`` is given and the dim is not divisible by the mapped
+    axes' product (jit in_shardings require exact divisibility)."""
+    axes = []
+    used = set()
+
+    def flat(x):
+        if x is None:
+            return ()
+        return (x,) if isinstance(x, str) else tuple(x)
+
+    for dim, name in zip(decl.shape, decl.logical):
+        mapped = rules.get(name) if name else None
+        ok = mapped is not None
+        if ok:
+            group = flat(mapped)
+            if any(g in used for g in group):
+                ok = False
+            elif axis_sizes is not None:
+                prod = 1
+                for g in group:
+                    prod *= axis_sizes.get(g, 1)
+                if prod == 0 or dim % prod != 0:
+                    ok = False
+        if ok:
+            axes.append(mapped)
+            used.update(flat(mapped))
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def param_specs(decls: PyTree, rules: Dict[str, Any],
+                axis_sizes: Optional[Dict[str, int]] = None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda d: spec_for(d, rules, axis_sizes), decls, is_leaf=is_decl)

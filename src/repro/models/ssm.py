@@ -1,0 +1,154 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060) in pure lax.
+
+Training/prefill uses the paper's *chunked* algorithm: split the sequence
+into chunks of length Q; compute intra-chunk outputs as a masked
+attention-like quadratic form over decay factors, and pass inter-chunk
+state [H, N, P] through a ``lax.scan`` (linear in sequence length — this is
+what makes ``long_500k`` runnable for the ssm/hybrid architectures).  The
+chunk body is the jnp oracle for ``repro.kernels.ssd_scan``.
+
+Decode carries the state explicitly: O(1) per token, no KV cache.
+
+All SSD internals run in f32; block I/O is bf16.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray,
+                chunk: int,
+                state_in: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence.
+
+    x:  [B, S, H, P]  (bf16 ok)       dt: [B, S, H]   (f32, post-softplus)
+    a:  [H]           (f32, negative) b/c: [B, S, G, N] (bf16 ok)
+    d:  [H]           (f32 skip gain)
+    Returns (y [B, S, H, P], final state [B, H, N, P]).
+    """
+    B, S_orig, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+
+    # Zero-pad to the chunk grid — exact: dt=0 gives decay exp(0)=1 and a
+    # zero state update, C=0 gives zero output at pad positions.
+    pad = (-S_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S_orig + pad
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    bc = b.reshape(B, nc, chunk, G, N).astype(f32)
+    cc = c.reshape(B, nc, chunk, G, N).astype(f32)
+
+    # Broadcast groups -> heads.
+    bh = jnp.repeat(bc, rep, axis=3)                    # [B,nc,Q,H,N]
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                   # [B,nc,Q,H]
+    cum = jnp.cumsum(da, axis=2)
+    total = cum[:, :, -1:, :]                           # [B,nc,1,H]
+
+    # Intra-chunk (masked quadratic form).  The mask must sit INSIDE the
+    # exponent: for i < j the raw difference is positive and can overflow
+    # to inf, and inf * 0 would poison the whole chunk with NaNs.
+    ii = jnp.arange(chunk)
+    mask = (ii[:, None] >= ii[None, :])                 # [i, j]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,i,j,H]
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    seg = jnp.exp(diff)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", ch, bh)   # [B,nc,i,j,H]
+    w = scores * seg
+    w = w * dtc[:, :, None, :, :]                       # dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # Per-chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j x_j^T.
+    decay_to_end = jnp.exp(total - cum)                 # [B,nc,Q,H]
+    sb = bh * (decay_to_end * dtc)[..., None]           # [B,nc,Q,H,N]
+    chunk_states = jnp.einsum("bcjhn,bcjhp->bchnp", sb, xc)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(total[:, :, 0, :])            # [B,nc,H]
+    s0 = (jnp.zeros((B, H, N, P), f32) if state_in is None
+          else state_in.astype(f32))
+
+    def step(state, inp):
+        dec, s_c = inp                                  # [B,H], [B,H,N,P]
+        new = state * dec[..., None, None] + s_c
+        return new, state                               # emit state *before*
+
+    final, prevs = jax.lax.scan(
+        step, s0,
+        (chunk_decay.transpose(1, 0, 2), chunk_states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)        # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         ch * jnp.exp(cum)[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xc.reshape(B, S, H, P) * d[None, None, :, None]
+    return y[:, :S_orig].astype(x.dtype), final
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                    d: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token SSD update.
+
+    state: [B, H, N, P]; x: [B, H, P]; dt: [B, H]; b/c: [B, G, N].
+    Returns (y [B, H, P], new state).
+    """
+    B, H, _, _ = state.shape
+    G = b.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    bh = jnp.repeat(b.astype(f32), rep, axis=1)         # [B,H,N]
+    ch = jnp.repeat(c.astype(f32), rep, axis=1)
+    dec = jnp.exp(dtf * a[None, :])                     # [B,H]
+    upd = (dtf[..., None] * bh)[..., None] * xf[:, :, None, :]   # [B,H,N,P]
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state)
+    y = y + xf * d[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (the short conv in the mamba2 block).
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, C]; w: [K, C] depthwise taps.  Causal (left) padding."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                                   # K is 4: unrolled
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * \
+            w[i][None, None, :].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(cache: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cache: [B, K-1, C] (previous inputs); xt: [B, C].  Returns
+    (yt [B, C], new cache)."""
+    k = w.shape[0]
+    window = jnp.concatenate([cache, xt[:, None, :]], axis=1)   # [B,K,C]
+    yt = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                    w.astype(jnp.float32))
+    return yt.astype(xt.dtype), window[:, 1:, :]

@@ -1,0 +1,20 @@
+"""Problem instances for the parallel recursive backtracking framework.
+
+Each problem is exposed in two exactly-equivalent forms:
+
+* ``make_<problem>``      — :class:`repro.core.api.BinaryProblem` (jnp,
+  shape-static, vmap-safe) consumed by the vectorized engine;
+* ``make_<problem>_py``   — :class:`repro.core.serial.PyProblem` (numpy
+  scalar) consumed by the serial oracle and the protocol simulator.
+
+Equivalence (identical search trees node-for-node) is what the paper's
+determinism requirement demands and is asserted by tests.
+"""
+
+from repro.problems.graphs import (  # noqa: F401
+    Graph, gnp_graph, circulant_graph, cell60_graph, pack_adjacency,
+    random_regularish_graph,
+)
+from repro.problems.vertex_cover import make_vertex_cover, make_vertex_cover_py  # noqa: F401
+from repro.problems.dominating_set import make_dominating_set, make_dominating_set_py  # noqa: F401
+from repro.problems.subset_sum import make_subset_sum, make_subset_sum_py  # noqa: F401

@@ -1,0 +1,149 @@
+"""DOMINATING SET via reduction to MINIMUM SET COVER (paper §V, ref [4]).
+
+Universe = vertices; the set of vertex ``v`` is its closed neighborhood
+N[v].  Branch on the candidate covering the most undominated vertices
+(ties: smallest id) — left child takes ``v`` into the dominating set, right
+child discards ``v`` as a candidate (the paper: "the right branch forces v
+to be out of any solution").
+
+Bound: ``|D| + ceil(undominated / best_coverage)`` (admissible — every
+further pick dominates at most ``best_coverage`` new vertices).  A node
+with undominated vertices but zero possible coverage is infeasible
+(INF bound, arity 0).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import INF_VALUE, BinaryProblem
+from repro.core.serial import INF, PyProblem
+from repro.problems.graphs import Graph, bit, full_mask
+
+
+class DSState(NamedTuple):
+    dominated: jnp.ndarray   # uint32[w]
+    cand: jnp.ndarray        # uint32[w] — vertices still allowed into D
+    chosen: jnp.ndarray      # uint32[w] — current D
+    size: jnp.ndarray        # int32
+
+
+def _closed_adj(graph: Graph) -> np.ndarray:
+    cadj = graph.adj.copy()
+    for v in range(graph.n):
+        cadj[v] |= bit(v, graph.words)
+    return cadj
+
+
+def make_dominating_set(graph: Graph) -> BinaryProblem:
+    n, w = graph.n, graph.words
+    cadj = jnp.asarray(_closed_adj(graph))
+    fullm = jnp.asarray(full_mask(n))
+    word = jnp.asarray(np.arange(n, dtype=np.int32) // 32)
+    shift = jnp.asarray((np.arange(n, dtype=np.int32) % 32).astype(np.uint32))
+    one = jnp.uint32(1)
+
+    def cand_flags(cand):
+        return ((cand[word] >> shift) & one) == one
+
+    def coverage(state: DSState) -> jnp.ndarray:      # int32[n], -1 for non-cand
+        undom = jnp.bitwise_and(cadj, jnp.bitwise_not(state.dominated)[None, :])
+        cov = jax.lax.population_count(undom).sum(axis=1).astype(jnp.int32)
+        return jnp.where(cand_flags(state.cand), cov, jnp.int32(-1))
+
+    def vbit(v):
+        return jnp.where(jnp.arange(w) == (v // 32),
+                         one << (v.astype(jnp.uint32) % 32), jnp.uint32(0))
+
+    def root() -> DSState:
+        return DSState(dominated=jnp.zeros(w, jnp.uint32), cand=fullm,
+                       chosen=jnp.zeros(w, jnp.uint32), size=jnp.int32(0))
+
+    def apply(state: DSState, b: jnp.ndarray) -> DSState:
+        cov = coverage(state)
+        v = jnp.argmax(cov).astype(jnp.int32)
+        bv = vbit(v)
+        take = b == 0
+        dominated = jnp.where(take, jnp.bitwise_or(state.dominated, cadj[v]),
+                              state.dominated)
+        return DSState(
+            dominated=dominated,
+            cand=jnp.bitwise_and(state.cand, jnp.bitwise_not(bv)),
+            chosen=jnp.where(take, jnp.bitwise_or(state.chosen, bv),
+                             state.chosen),
+            size=state.size + jnp.where(take, jnp.int32(1), jnp.int32(0)))
+
+    def undom_count(state):
+        rem = jnp.bitwise_and(fullm, jnp.bitwise_not(state.dominated))
+        return jax.lax.population_count(rem).sum().astype(jnp.int32)
+
+    def leaf_value(state: DSState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return undom_count(state) == 0, state.size
+
+    def lower_bound(state: DSState) -> jnp.ndarray:
+        u = undom_count(state)
+        best_cov = jnp.max(coverage(state))
+        infeasible = (u > 0) & (best_cov <= 0)
+        need = (u + jnp.maximum(best_cov, 1) - 1) // jnp.maximum(best_cov, 1)
+        return jnp.where(infeasible, INF_VALUE, state.size + need)
+
+    return BinaryProblem(
+        name=f"ds[{graph.name}]", max_depth=n, root=root, apply=apply,
+        leaf_value=leaf_value, lower_bound=lower_bound,
+        solution_payload=lambda s: s.chosen,
+        payload_zero=lambda: jnp.zeros(w, jnp.uint32))
+
+
+def make_dominating_set_py(graph: Graph) -> PyProblem:
+    n, w = graph.n, graph.words
+    cadj = _closed_adj(graph)
+    fullm = full_mask(n)
+    word = np.arange(n, dtype=np.int32) // 32
+    shift = (np.arange(n, dtype=np.int32) % 32).astype(np.uint32)
+
+    def cand_flags(cand):
+        return ((cand[word] >> shift) & np.uint32(1)) == 1
+
+    def coverage(state):
+        dominated, cand = state[0], state[1]
+        cov = np.bitwise_count(cadj & ~dominated[None, :]).sum(axis=1).astype(np.int64)
+        return np.where(cand_flags(cand), cov, -1)
+
+    def vbit(v):
+        out = np.zeros(w, np.uint32)
+        out[v // 32] = np.uint32(1) << np.uint32(v % 32)
+        return out
+
+    def root():
+        return (np.zeros(w, np.uint32), fullm.copy(),
+                np.zeros(w, np.uint32), 0)
+
+    def apply(state, b):
+        dominated, cand, chosen, size = state
+        v = int(np.argmax(coverage(state)))
+        bv = vbit(v)
+        if b == 0:
+            return (dominated | cadj[v], cand & ~bv, chosen | bv, size + 1)
+        return (dominated, cand & ~bv, chosen, size)
+
+    def undom_count(state):
+        return int(np.bitwise_count(fullm & ~state[0]).sum())
+
+    def leaf_value(state):
+        return undom_count(state) == 0, state[3]
+
+    def lower_bound(state):
+        u = undom_count(state)
+        best_cov = int(np.max(coverage(state)))
+        if u > 0 and best_cov <= 0:
+            return INF
+        bc = max(best_cov, 1)
+        return state[3] + (u + bc - 1) // bc
+
+    return PyProblem(
+        name=f"ds[{graph.name}]", max_depth=n, root=root, apply=apply,
+        leaf_value=leaf_value, lower_bound=lower_bound)

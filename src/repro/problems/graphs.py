@@ -1,0 +1,131 @@
+"""Packed-bitset graphs (the paper's hybrid-representation substrate, §V).
+
+The paper's solvers use a "hybrid graph data-structure" combining
+adjacency-matrix and adjacency-list advantages with cheap backtracking
+undo.  The XLA-native equivalent is a *packed bitset adjacency matrix*:
+``uint32[n, w]`` with ``w = ceil(n/32)`` words per row.  Search-node state
+is then one or two ``uint32[w]`` masks — O(n/32) words — and every graph
+operation (degree, neighborhood union, vertex deletion) is a handful of
+bitwise ops + population counts, which vectorize over lanes and map to the
+VPU on TPU.  ``repro.kernels.bitset_degree`` provides the Pallas version of
+the hot fused degree+argmax; the jnp forms here are its oracle.
+
+Generators are deterministic (seeded) — the framework requires
+reproducible search trees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WORD = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected graph with packed adjacency rows.
+
+    Attributes:
+      n: number of vertices (ids 0..n-1).
+      adj: uint32[n, w] packed adjacency matrix (symmetric, no self loops).
+      name: label used in logs/benchmarks.
+    """
+
+    n: int
+    adj: np.ndarray
+    name: str = "graph"
+
+    @property
+    def words(self) -> int:
+        return self.adj.shape[1]
+
+    @property
+    def m(self) -> int:
+        return int(np.bitwise_count(self.adj).sum()) // 2
+
+    def degrees(self) -> np.ndarray:
+        return np.bitwise_count(self.adj).sum(axis=1).astype(np.int32)
+
+
+def num_words(n: int) -> int:
+    return (n + WORD - 1) // WORD
+
+
+def full_mask(n: int) -> np.ndarray:
+    """uint32[w] with bits 0..n-1 set (the all-alive mask)."""
+    w = num_words(n)
+    mask = np.zeros(w, np.uint32)
+    for i in range(n):
+        mask[i // WORD] |= np.uint32(1) << np.uint32(i % WORD)
+    return mask
+
+
+def bit(v: int, w: int) -> np.ndarray:
+    """uint32[w] with only bit v set."""
+    out = np.zeros(w, np.uint32)
+    out[v // WORD] = np.uint32(1) << np.uint32(v % WORD)
+    return out
+
+
+def pack_adjacency(dense: np.ndarray, name: str = "graph") -> Graph:
+    """Pack a dense bool/int adjacency matrix into a Graph."""
+    dense = np.asarray(dense)
+    n = dense.shape[0]
+    dense = (dense != 0)
+    dense = dense | dense.T
+    np.fill_diagonal(dense, False)
+    w = num_words(n)
+    adj = np.zeros((n, w), np.uint32)
+    for i in range(n):
+        idxs = np.nonzero(dense[i])[0]
+        for j in idxs:
+            adj[i, j // WORD] |= np.uint32(1) << np.uint32(j % WORD)
+    return Graph(n=n, adj=adj, name=name)
+
+
+def gnp_graph(n: int, p: float, seed: int, name: str = "") -> Graph:
+    """Erdős–Rényi G(n, p) — the p_hat-style random benchmark family."""
+    rng = np.random.RandomState(seed)
+    upper = rng.rand(n, n) < p
+    dense = np.triu(upper, k=1)
+    return pack_adjacency(dense, name or f"gnp_{n}_{p}_{seed}")
+
+
+def circulant_graph(n: int, offsets, name: str = "") -> Graph:
+    """Circulant graph: v ~ v±o (mod n) for each offset o.
+
+    With two offsets this is 4-regular — the stand-in for the paper's
+    60-cell (300 vertices, 600 edges, 4-regular; its regularity defeats
+    pruning, which is what made it hard).
+    """
+    dense = np.zeros((n, n), bool)
+    for v in range(n):
+        for o in offsets:
+            dense[v][(v + o) % n] = True
+            dense[v][(v - o) % n] = True
+    return pack_adjacency(dense, name or f"circulant_{n}_{tuple(offsets)}")
+
+
+def cell60_graph(n: int = 300) -> Graph:
+    """4-regular 300-vertex circulant — the 60-cell analogue (§VI).
+
+    The true 60-cell is a specific 4-regular polytopal graph; what makes it
+    a hard VC instance is 4-regularity + high girth defeating degree-based
+    pruning.  A circulant with coprime offsets reproduces those structural
+    properties deterministically without shipping polytope data.
+    """
+    return circulant_graph(n, (1, 7), name="60cell-analogue")
+
+
+def random_regularish_graph(n: int, k: int, seed: int, name: str = "") -> Graph:
+    """k-regular-ish graph via random perfect matchings (union of k)."""
+    rng = np.random.RandomState(seed)
+    dense = np.zeros((n, n), bool)
+    for _ in range(k):
+        perm = rng.permutation(n)
+        for i in range(0, n - 1, 2):
+            a, b = perm[i], perm[i + 1]
+            dense[a, b] = dense[b, a] = True
+    return pack_adjacency(dense, name or f"reg_{n}_{k}_{seed}")

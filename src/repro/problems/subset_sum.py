@@ -1,0 +1,100 @@
+"""Minimum-cardinality SUBSET SUM — the third, non-graph application.
+
+Demonstrates the framework's problem-obliviousness (§I: "recursive
+backtracking is a widely-used technique for solving a very long list of
+practical problems").  Given positive ints and a target, find the smallest
+subset summing exactly to the target.  Left child takes item ``pos``,
+right child skips it; depth == item position, so the tree is binary with
+depth exactly n and the indexed encoding applies unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import INF_VALUE, BinaryProblem
+from repro.core.serial import INF, PyProblem
+
+
+class SSState(NamedTuple):
+    pos: jnp.ndarray      # int32 — next item to decide
+    total: jnp.ndarray    # int32 — sum of taken items
+    count: jnp.ndarray    # int32 — taken items
+    mask: jnp.ndarray     # int32[n] — 1 where taken (solution payload)
+
+
+def make_subset_sum(values, target: int) -> BinaryProblem:
+    vals = jnp.asarray(np.asarray(values, dtype=np.int32))
+    n = int(vals.shape[0])
+    # Suffix sums let us prune branches that can no longer reach the target.
+    suffix = jnp.asarray(np.concatenate(
+        [np.cumsum(np.asarray(values, dtype=np.int64)[::-1])[::-1],
+         [0]]).astype(np.int32))
+    tgt = jnp.int32(target)
+
+    def root() -> SSState:
+        return SSState(pos=jnp.int32(0), total=jnp.int32(0),
+                       count=jnp.int32(0), mask=jnp.zeros(n, jnp.int32))
+
+    def apply(s: SSState, b: jnp.ndarray) -> SSState:
+        p = jnp.clip(s.pos, 0, n - 1)
+        take = b == 0
+        return SSState(
+            pos=s.pos + 1,
+            total=s.total + jnp.where(take, vals[p], jnp.int32(0)),
+            count=s.count + jnp.where(take, jnp.int32(1), jnp.int32(0)),
+            mask=s.mask.at[p].set(jnp.where(take, 1, s.mask[p])))
+
+    def leaf_value(s: SSState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (s.pos >= n) & (s.total == tgt), s.count
+
+    def lower_bound(s: SSState) -> jnp.ndarray:
+        p = jnp.clip(s.pos, 0, n)
+        overshoot = s.total > tgt
+        unreachable = s.total + suffix[p] < tgt
+        done_wrong = (s.pos >= n) & (s.total != tgt)
+        bad = overshoot | unreachable | done_wrong
+        return jnp.where(bad, INF_VALUE, s.count + (s.total != tgt))
+
+    return BinaryProblem(
+        name=f"subset_sum[n={n}]", max_depth=n, root=root, apply=apply,
+        leaf_value=leaf_value, lower_bound=lower_bound,
+        solution_payload=lambda s: s.mask,
+        payload_zero=lambda: jnp.zeros(n, jnp.int32))
+
+
+def make_subset_sum_py(values, target: int) -> PyProblem:
+    vals = [int(v) for v in values]
+    n = len(vals)
+    suffix = [0] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        suffix[i] = suffix[i + 1] + vals[i]
+
+    def root():
+        return (0, 0, 0)
+
+    def apply(s, b):
+        pos, total, count = s
+        p = min(pos, n - 1)
+        if b == 0:
+            return (pos + 1, total + vals[p], count + 1)
+        return (pos + 1, total, count)
+
+    def leaf_value(s):
+        pos, total, count = s
+        return pos >= n and total == target, count
+
+    def lower_bound(s):
+        pos, total, count = s
+        p = min(pos, n)
+        if total > target or total + suffix[p] < target or \
+                (pos >= n and total != target):
+            return INF
+        return count + (1 if total != target else 0)
+
+    return PyProblem(
+        name=f"subset_sum[n={n}]", max_depth=n, root=root, apply=apply,
+        leaf_value=leaf_value, lower_bound=lower_bound)

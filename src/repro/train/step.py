@@ -1,0 +1,142 @@
+"""Training step factory: microbatched grad accumulation + AdamW.
+
+``make_train_step(cfg, mesh)`` returns a jit-able
+``step(params, opt, batch, stepno) -> (params, opt, metrics)`` where
+
+* the global batch is split into ``cfg.microbatches`` microbatches scanned
+  with f32 grad accumulation (sharded like the params — ZeRO);
+* each microbatch forward/backward runs under the arch's remat policy;
+* params are f32 masters, cast to the declared compute dtype (bf16) at use.
+
+The same factory serves the dry-run (lowered with abstract inputs, explicit
+in/out shardings) and the real CPU training example.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.models.params import abstract_params, is_decl
+from repro.train.optim import AdamState, adamw_update, cosine_lr
+
+PyTree = Any
+
+
+def cast_to_compute(cfg: ArchConfig, params: PyTree) -> PyTree:
+    """Cast f32 master params to their declared (compute) dtypes."""
+    decls = M.param_decls(cfg)
+    ab = abstract_params(decls)
+    return jax.tree_util.tree_map(
+        lambda p, a: p.astype(a.dtype), params, ab)
+
+
+def master_params(cfg: ArchConfig, params: PyTree) -> PyTree:
+    """Promote compute-dtype params to f32 masters (training storage)."""
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32) if jnp.issubdtype(
+            p.dtype, jnp.floating) else p, params)
+
+
+def make_loss(cfg: ArchConfig, sh: M.Shardings,
+              skip_masked_blocks: bool = False,
+              block_q: int = 256, block_k: int = 256):
+    """Loss over COMPUTE-dtype params.  The f32->bf16 master cast happens
+    once per step in the caller (outside the microbatch loop): casting
+    inside would make the ZeRO all-gathers move f32 masters — 2x the
+    collective bytes and an extra f32 weight copy resident per layer."""
+    def loss(cparams, batch):
+        ctx = M.make_ctx(cfg, "train", sh,
+                         skip_masked_blocks=skip_masked_blocks,
+                         block_q=block_q, block_k=block_k)
+        return M.loss_fn(cfg, cparams, batch, ctx)
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                    lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000,
+                    microbatches: Optional[int] = None,
+                    skip_masked_blocks: bool = False,
+                    block_q: int = 256, block_k: int = 256,
+                    seq_shard: bool = False,
+                    attn_heads_shard: bool = True):
+    sh = M.Shardings(mesh, seq_shard=seq_shard,
+                     attn_heads_shard=attn_heads_shard)
+    nmb_cfg = microbatches if microbatches is not None else cfg.microbatches
+    loss_fn = make_loss(cfg, sh, skip_masked_blocks, block_q, block_k)
+
+    # Cap microbatches so each one still has >= 1 sequence per data shard
+    # (a 16-mb config on the 32-way-DP multi-pod mesh would otherwise
+    # leave half the devices idle every microbatch).
+    dp = 1
+    if mesh is not None:
+        sizes = M.mesh_axis_sizes(mesh)
+        for a in ("pod", "data"):
+            dp *= sizes.get(a, 1)
+
+    def split_mb(batch, nmb):
+        def r(x):
+            b = x.shape[0]
+            return x.reshape((nmb, b // nmb) + x.shape[1:])
+        return {k: r(v) for k, v in batch.items()}
+
+    def step(params, opt: AdamState, batch, stepno):
+        gb = batch["tokens"].shape[0]
+        nmb = max(1, min(nmb_cfg, gb // max(dp, 1)))
+        while gb % nmb:
+            nmb -= 1
+        # One bf16 cast of the (sharded) masters per step; the cast is
+        # linear, so d loss/d master == f32(d loss/d cast).
+        cparams = cast_to_compute(cfg, params)
+        if nmb == 1:
+            l, grads = jax.value_and_grad(loss_fn)(cparams, batch)
+        else:
+            mbs = split_mb(batch, nmb)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(cparams, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(mb_body, (zero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / nmb, gsum)
+            l = lsum / nmb
+        lr_t = cosine_lr(stepno, lr, warmup, total_steps)
+        new_params, new_opt = adamw_update(params, grads, opt, stepno, lr_t)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree_util.tree_leaves(grads))
+        metrics = {"loss": l, "lr": lr_t, "grad_norm": jnp.sqrt(gsq)}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def shardings_for_step(cfg: ArchConfig, mesh: Mesh,
+                       global_batch: int) -> Tuple[PyTree, PyTree, PyTree]:
+    """(param_shardings, opt_shardings, batch_shardings) as NamedShardings."""
+    pspecs = M.specs(cfg, mesh.axis_names, M.mesh_axis_sizes(mesh))
+    to_ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree_util.tree_map(to_ns, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    o_sh = AdamState(m=p_sh, v=p_sh)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = P(fsdp or None)
+
+    def batch_sh(x):
+        return NamedSharding(mesh, bspec)
+
+    from repro.data.pipeline import input_abstract
+    b_ab = input_abstract(cfg, global_batch, 1)
+    b_sh = {k: NamedSharding(mesh, P(fsdp or None)) for k in b_ab}
+    return p_sh, o_sh, b_sh

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each assigned architecture: instantiate the reduced config, run one
+forward and one train step, assert output shapes and no NaNs; then check
+prefill+decode agreement with the full forward (the serving path computes
+the same function incrementally).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.models.model import Shardings, make_ctx
+from repro.train.optim import adamw_init, adamw_update
+
+ARCHS = configs.ARCH_IDS
+
+
+def make_batch(cfg, b, s, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.n_codebooks:
+        toks = jax.random.randint(k1, (b, s, cfg.n_codebooks), 0, cfg.vocab)
+        labels = jax.random.randint(k2, (b, s, cfg.n_codebooks), 0, cfg.vocab)
+    else:
+        toks = jax.random.randint(k1, (b, s), 0, cfg.vocab)
+        labels = jax.random.randint(k2, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": labels}
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(
+            k3, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = configs.smoke(arch)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    ctx = make_ctx(cfg, "train", Shardings(None), block_q=16, block_k=16)
+    b, s = 2, 32
+    batch = make_batch(cfg, b, s, jax.random.PRNGKey(1))
+    logits = model.forward(cfg, params, batch, ctx)
+    if cfg.n_codebooks:
+        assert logits.shape == (b, s, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = configs.smoke(arch)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    ctx = make_ctx(cfg, "train", Shardings(None), block_q=16, block_k=16)
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(1))
+
+    def loss(p):
+        if cfg.n_codebooks:
+            logits = model.forward(cfg, p, batch, ctx)
+            return model.xent(logits, batch["labels"], cfg.vocab)
+        return model.loss_fn(cfg, p, batch, ctx)
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    opt = adamw_init(params)
+    params2, opt2 = adamw_update(params, grads, opt, step=jnp.int32(1),
+                                 lr=1e-3)
+    l1 = float(loss(params2))
+    assert np.isfinite(l1)
+    assert l1 < float(l0) + 1.0         # no explosion after one step
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits(prefill then N decode steps) == logits(full forward)."""
+    cfg = configs.smoke(arch)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    sh = Shardings(None)
+    b, s_pre, n_dec = 2, 16, 4
+    s_total = s_pre + n_dec
+    batch = make_batch(cfg, b, s_total, jax.random.PRNGKey(1))
+
+    # Reference: full forward over the whole sequence.
+    ctx_f = make_ctx(cfg, "train", sh, block_q=8, block_k=8)
+    ref = model.forward(cfg, params, batch, ctx_f).astype(jnp.float32)
+
+    # Prefill on the first s_pre tokens.
+    pre_batch = {k: (v[:, :s_pre] if v.ndim >= 2 and v.shape[1] == s_total
+                     else v) for k, v in batch.items()}
+    if "vision" in batch:
+        pre_batch["vision"] = batch["vision"]
+    ctx_p = make_ctx(cfg, "prefill", sh, block_q=8, block_k=8)
+    logits_p, cache = model.prefill(cfg, params, pre_batch, ctx_p)
+    cache = model.pad_cache(cfg, cache, s_total)
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(ref[:, s_pre - 1]),
+        rtol=0.08, atol=0.08)
+
+    # Decode the next tokens one at a time.
+    for i in range(n_dec - 1):
+        pos = jnp.int32(s_pre + i)
+        tok = batch["tokens"][:, s_pre + i:s_pre + i + 1]
+        ctx_d = make_ctx(cfg, "decode", sh, pos=pos)
+        logits_d, cache = model.decode_step(cfg, params, cache, tok, pos,
+                                            ctx_d)
+        np.testing.assert_allclose(
+            np.asarray(logits_d, np.float32),
+            np.asarray(ref[:, s_pre + i]), rtol=0.08, atol=0.08,
+            err_msg=f"{arch} decode step {i}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates_abstractly(arch):
+    """The FULL config must build abstract params (no allocation) and the
+    declared parameter count must match the analytic formula."""
+    cfg = configs.get(arch)
+    ab = model.abstract(cfg)
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(ab))
+    assert total == cfg.param_count(), (total, cfg.param_count())
+
+
+def test_param_counts_plausible():
+    """Sanity: named sizes are in the advertised ballpark."""
+    expect = {
+        "qwen1.5-32b": (30e9, 36e9),
+        "qwen2-7b": (6e9, 9e9),
+        "gemma2-27b": (24e9, 30e9),
+        "glm4-9b": (8e9, 11e9),
+        "internvl2-76b": (66e9, 80e9),   # LM backbone (ViT is a stub)
+        "mamba2-130m": (0.1e9, 0.17e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),   # total (16 experts)
+        "mixtral-8x22b": (130e9, 150e9),
+        "zamba2-2.7b": (2.2e9, 3.2e9),
+        "musicgen-large": (1.5e9, 2.6e9),
+    }
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        lo, hi = expect[cfg.name]
+        n = cfg.param_count()
+        assert lo <= n <= hi, f"{cfg.name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,182 @@
+"""Vectorized-engine tests: the jnp lanes must agree with the serial oracle.
+
+Paper validation targets applied to the TPU-native engine:
+  * identical optima to SERIAL-RB for any lane count / round granularity;
+  * exhaustive trees: total nodes visited == serial count (no subtree lost,
+    none explored twice — the GETHEAVIESTTASKINDEX/DELEGATED invariant);
+  * T_S <= T_R accounting;
+  * checkpoint/restart (paper §VII) resumes to the same optimum, including
+    elastic restarts onto a different lane count.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as ckpt
+from repro.core.api import BinaryProblem, INF_VALUE
+from repro.core.distributed import solve
+from repro.core.engine import init_lanes, make_expand
+from repro.core.serial import serial_rb
+from repro.problems import (
+    gnp_graph, random_regularish_graph,
+    make_dominating_set, make_dominating_set_py,
+    make_subset_sum, make_subset_sum_py,
+    make_vertex_cover, make_vertex_cover_py,
+)
+
+
+def full_tree_problem_jnp(depth: int) -> BinaryProblem:
+    """Exhaustive complete binary tree (same as the serial twin in
+    test_serial_protocol) — exact node accounting, pruning never fires."""
+
+    def root():
+        return (jnp.int32(0), jnp.int32(0))
+
+    def apply(s, b):
+        d, p = s
+        return (d + 1, p * 2 + b.astype(jnp.int32))
+
+    def leaf_value(s):
+        d, p = s
+        return d == depth, p + 1
+
+    return BinaryProblem(
+        name=f"full{depth}", max_depth=depth, root=root, apply=apply,
+        leaf_value=leaf_value,
+        lower_bound=lambda s: jnp.int32(0),
+        solution_payload=lambda s: s[1],
+        payload_zero=lambda: jnp.int32(0),
+    )
+
+
+# -- single-lane engine == serial oracle -------------------------------------
+
+@pytest.mark.parametrize("depth", [3, 6])
+def test_single_lane_exhaustive_tree(depth):
+    prob = full_tree_problem_jnp(depth)
+    lanes = init_lanes(prob, 1)
+    lanes = make_expand(prob, 1 << (depth + 3))(lanes)
+    assert not bool(lanes.active.any())
+    assert int(lanes.best) == 1
+    assert int(lanes.nodes.sum()) == 2 ** (depth + 1) - 1
+
+
+@pytest.mark.parametrize("n,p,seed", [(14, 0.3, 0), (16, 0.35, 5), (18, 0.2, 7)])
+def test_single_lane_vc_matches_serial(n, p, seed):
+    g = gnp_graph(n, p, seed=seed)
+    serial_best, serial_nodes, _ = serial_rb(make_vertex_cover_py(g))
+    prob = make_vertex_cover(g)
+    lanes = init_lanes(prob, 1)
+    lanes = make_expand(prob, 200_000)(lanes)
+    assert not bool(lanes.active.any())
+    assert int(lanes.best) == serial_best
+    # One lane has no steals: the engine must walk the identical tree.
+    assert int(lanes.nodes.sum()) == serial_nodes
+
+
+# -- multi-lane solve == serial optimum, full coverage ------------------------
+
+@pytest.mark.parametrize("lanes_n", [2, 4, 8])
+@pytest.mark.parametrize("depth", [4, 6])
+def test_multilane_exhaustive_coverage(lanes_n, depth):
+    prob = full_tree_problem_jnp(depth)
+    _, stats, _ = solve(prob, num_lanes=lanes_n, steps_per_round=8,
+                        bootstrap_rounds=3, bootstrap_steps=2)
+    assert stats.best == 1
+    assert stats.nodes == 2 ** (depth + 1) - 1     # none lost, none twice
+    assert stats.t_s <= stats.t_r + 1              # paper: T_S <= T_R
+
+
+@pytest.mark.parametrize("lanes_n", [1, 4, 16])
+def test_multilane_vc_optimum(lanes_n):
+    g = gnp_graph(16, 0.35, seed=5)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    prob = make_vertex_cover(g)
+    payload, stats, _ = solve(prob, num_lanes=lanes_n, steps_per_round=64,
+                              bootstrap_rounds=2, bootstrap_steps=4)
+    assert stats.best == serial_best
+    # The returned payload must be a valid cover of the claimed size.
+    cover_bits = np.asarray(payload)
+    assert int(np.bitwise_count(cover_bits).sum()) == serial_best
+
+
+@pytest.mark.parametrize("lanes_n", [4, 8])
+def test_multilane_ds_optimum(lanes_n):
+    g = gnp_graph(12, 0.3, seed=9)
+    serial_best, _, _ = serial_rb(make_dominating_set_py(g))
+    payload, stats, _ = solve(make_dominating_set(g), num_lanes=lanes_n,
+                              steps_per_round=64, bootstrap_rounds=2,
+                              bootstrap_steps=4)
+    assert stats.best == serial_best
+
+
+def test_multilane_subset_sum_optimum():
+    vals = [3, 34, 4, 12, 5, 2, 7, 13]
+    serial_best, _, _ = serial_rb(make_subset_sum_py(vals, 30))
+    _, stats, _ = solve(make_subset_sum(vals, 30), num_lanes=4,
+                        steps_per_round=32, bootstrap_rounds=2)
+    assert stats.best == serial_best
+
+
+def test_harder_regular_instance_many_lanes():
+    g = random_regularish_graph(36, 4, seed=3)
+    serial_best, serial_nodes, _ = serial_rb(make_vertex_cover_py(g))
+    _, stats, _ = solve(make_vertex_cover(g), num_lanes=32,
+                        steps_per_round=64, bootstrap_rounds=4,
+                        bootstrap_steps=4)
+    assert stats.best == serial_best
+    # Bound-sharing may prune differently than the serial order but must
+    # never *expand* the tree beyond ~the serial count by re-exploration.
+    assert stats.nodes <= serial_nodes * 2
+
+
+# -- checkpoint / restart (paper §VII) ----------------------------------------
+
+def test_checkpoint_restart_same_lanes(tmp_path):
+    g = gnp_graph(16, 0.3, seed=11)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    prob = make_vertex_cover(g)
+    path = str(tmp_path / "solver.ckpt")
+
+    # Run a few rounds only, checkpointing every round.
+    solve(prob, num_lanes=4, steps_per_round=16, max_rounds=3,
+          bootstrap_rounds=1, checkpoint_every=1, checkpoint_path=path)
+    assert os.path.exists(path)
+
+    # Resume to completion; optimum must match the serial oracle.
+    _, stats, _ = solve(prob, num_lanes=4, steps_per_round=64,
+                        resume_from=path)
+    assert stats.best == serial_best
+
+
+@pytest.mark.parametrize("new_lanes", [2, 8])
+def test_elastic_restart_different_lane_count(new_lanes, tmp_path):
+    g = gnp_graph(16, 0.3, seed=13)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    prob = make_vertex_cover(g)
+    path = str(tmp_path / "solver.ckpt")
+    solve(prob, num_lanes=4, steps_per_round=16, max_rounds=3,
+          bootstrap_rounds=1, checkpoint_every=1, checkpoint_path=path)
+    _, stats, _ = solve(prob, num_lanes=new_lanes, steps_per_round=64,
+                        resume_from=path)
+    assert stats.best == serial_best
+
+
+def test_checkpoint_roundtrip_is_lossless(tmp_path):
+    prob = full_tree_problem_jnp(5)
+    lanes = init_lanes(prob, 4)
+    lanes = make_expand(prob, 7)(lanes)
+    path = str(tmp_path / "rt.ckpt")
+    ckpt.save(path, lanes)
+    restored, pool = ckpt.restore(path, prob, 4)
+    assert not pool
+    np.testing.assert_array_equal(np.asarray(restored.idx),
+                                  np.asarray(lanes.idx))
+    np.testing.assert_array_equal(np.asarray(restored.depth),
+                                  np.asarray(lanes.depth))
+    np.testing.assert_array_equal(np.asarray(restored.active),
+                                  np.asarray(lanes.active))
+    assert int(restored.best) == int(lanes.best)

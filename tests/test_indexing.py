@@ -1,0 +1,146 @@
+"""Indexing machinery tests: Fig. 4 transcriptions, vectorized forms, §IV-C.
+
+The invariants come straight from the paper:
+  * GETHEAVIESTTASKINDEX returns the *shallowest* open slot (max weight);
+  * FIXINDEX reconstructs the right-sibling path (interior -1 -> 0, last=1);
+  * the vectorized jnp forms agree with the scalar Fig. 4 forms bit-for-bit;
+  * the §IV-C arbitrary-branching encoding degenerates to the binary one.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import DELEGATED, LEFT, RIGHT, UNVISITED
+from repro.core.indexing import (
+    ArbitraryIndex, extract_task, fix_index, get_heaviest_task_index,
+    heaviest_open_slot, index_to_position, task_weight,
+)
+
+D = 12
+
+
+# -- scalar Fig. 4 ----------------------------------------------------------
+
+def test_paper_worked_example():
+    """§IV-A worked example: current_idx={1,0,1,0} at N_{3,2}."""
+    cur = [1, 0, 1, 0]
+    got = get_heaviest_task_index(cur)
+    assert got == [1, -1]
+    assert cur == [1, -1, 1, 0]
+    fixed = fix_index(got)
+    assert fixed == [1, 1]           # N_{1,1}, the heaviest task
+    # second steal while still at N_{3,2}
+    got2 = get_heaviest_task_index(cur)
+    assert got2 == [1, -1, 1, -1]
+    assert cur == [1, -1, 1, -1]
+    assert fix_index(got2) == [1, 0, 1, 1]
+
+
+def test_get_heaviest_none_when_all_explored():
+    assert get_heaviest_task_index([1, 1, 1]) is None
+    assert get_heaviest_task_index([1, -1, 1]) is None
+    assert get_heaviest_task_index([]) is None
+
+
+@given(st.lists(st.sampled_from([0, 1, -1]), min_size=1, max_size=D))
+def test_scalar_extract_marks_first_zero(bits):
+    cur = [1] + bits                       # leading root marker like the paper
+    before = list(cur)
+    got = get_heaviest_task_index(cur)
+    zeros = [i for i, b in enumerate(before) if b == 0]
+    if not zeros:
+        assert got is None
+        assert cur == before
+    else:
+        i = zeros[0]
+        assert cur[i] == -1
+        assert cur[:i] == before[:i] and cur[i + 1:] == before[i + 1:]
+        assert got == before[:i] + [-1]
+        fixed = fix_index(got)
+        assert fixed[-1] == 1
+        assert all(b in (0, 1) for b in fixed)
+        # FIXINDEX restores the donor's *path*: interior negatives were lefts
+        assert fixed[:-1] == [0 if b < 0 else b for b in before[:i]]
+
+
+# -- vectorized == scalar ---------------------------------------------------
+
+@given(st.lists(st.sampled_from([0, 1, -1]), min_size=1, max_size=D))
+@settings(deadline=None, max_examples=50)
+def test_vectorized_matches_scalar(bits):
+    depth = len(bits)
+    idx = np.full(D + 1, int(UNVISITED), np.int8)
+    idx[:depth] = bits
+    jidx = jnp.asarray(idx)
+    slot = heaviest_open_slot(jidx, jnp.int32(0), jnp.int32(depth))
+    scal = list(bits)
+    got = get_heaviest_task_index(scal)
+    if got is None:
+        assert int(slot) == D + 1      # sentinel: no open slot
+        return
+    zero_pos = len(got) - 1
+    assert int(slot) == zero_pos
+    donor, task_bits = extract_task(jidx, slot)
+    assert int(donor[zero_pos]) == int(DELEGATED)
+    fixed = fix_index(got)
+    np.testing.assert_array_equal(
+        np.asarray(task_bits[: len(fixed)]), np.asarray(fixed, np.int8))
+    assert np.all(np.asarray(task_bits[len(fixed):]) == int(UNVISITED))
+
+
+def test_base_depth_protects_inherited_path():
+    """Slots below ``base`` (the thief's fixed path) are never donated."""
+    idx = jnp.asarray(np.array([0, 0, 1, 0, 0], np.int8))
+    # base=2: slots 0,1 are the inherited path (zeros there NOT stealable).
+    slot = heaviest_open_slot(idx, jnp.int32(2), jnp.int32(5))
+    assert int(slot) == 3
+
+
+def test_task_weight_matches_paper():
+    # w(N_{d,p}) = 1/(d+1); stolen node sits at depth slot+1.
+    assert float(task_weight(jnp.int32(0))) == pytest.approx(1 / 2)
+    assert float(task_weight(jnp.int32(3))) == pytest.approx(1 / 5)
+
+
+def test_index_to_position():
+    assert index_to_position([]) == (0, 0)
+    assert index_to_position([0, 1]) == (2, 1)
+    assert index_to_position([1, 1]) == (2, 3)
+
+
+# -- §IV-C arbitrary branching ---------------------------------------------
+
+def test_arbitrary_binary_degenerates():
+    """With branching factor 2 the two-row §IV-C encoding must agree with
+    the binary scheme: heaviest depth == shallowest open slot."""
+    a = ArbitraryIndex(8)
+    a.push_child(0, 2)      # went left at depth 0 -> idx2=1 (right pending)
+    a.push_child(1, 2)      # went right at depth 1 -> idx2=0
+    a.push_child(0, 2)      # left at depth 2 -> idx2=1
+    assert a.heaviest_depth() == 0
+    path, first, s = a.steal()
+    assert list(path) == [0] and first == 1 and s == 1
+    assert a.heaviest_depth() == 2
+
+
+def test_arbitrary_steal_suffix_rule():
+    """§IV-C: the stolen set S must be a suffix of the children ordering."""
+    a = ArbitraryIndex(4)
+    a.push_child(1, 5)      # at child 1 of 5 -> 3 right siblings pending
+    path, first, s = a.steal(take=2)
+    assert (first, s) == (3, 2)        # children {3,4}: the suffix
+    assert a.idx2[0] == 1              # child 2 still stealable
+    path, first, s = a.steal(take=5)
+    assert (first, s) == (2, 1)
+    assert a.heaviest_depth() is None
+
+
+def test_arbitrary_advance_sibling():
+    a = ArbitraryIndex(4)
+    a.push_child(0, 3)
+    assert a.advance_sibling()
+    assert a.idx1[0] == 1 and a.idx2[0] == 1
+    a.steal()
+    assert not a.advance_sibling()     # last sibling was delegated

@@ -1,0 +1,182 @@
+"""Property tests on the LM substrate's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blocked_attention, decode_attention,
+                                    quantize_kv)
+from repro.models.config import MoEConfig
+from repro.models.moe import (capacity, moe_ffn, moe_ffn_dense_reference,
+                              route)
+from repro.models.ssm import causal_conv, causal_conv_step, ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# Causality: output at position t must not depend on inputs after t.
+# ---------------------------------------------------------------------------
+
+def test_blocked_attention_is_causal():
+    key = jax.random.PRNGKey(0)
+    b, s, h, g, hd = 1, 64, 4, 2, 16
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, g, hd))
+    v = jax.random.normal(ks[2], (b, s, g, hd))
+    out = blocked_attention(q, k, v, block_q=16, block_k=16)
+    # perturb the future: positions >= t
+    t = 20
+    k2 = k.at[:, t:].set(jax.random.normal(ks[3], (b, s - t, g, hd)))
+    v2 = v.at[:, t:].set(0.0)
+    out2 = blocked_attention(q, k2, v2, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out[:, :t]),
+                               np.asarray(out2[:, :t]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ssd_is_causal():
+    key = jax.random.PRNGKey(1)
+    b, s, h, p, n = 1, 64, 2, 16, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, 1, n)) * 0.3
+    cc = jax.random.normal(ks[4], (b, s, 1, n)) * 0.3
+    d = jnp.ones((h,))
+    y, _ = ssd_chunked(x, dt, a, bb, cc, d, chunk=16)
+    t = 30
+    x2 = x.at[:, t:].set(123.0)
+    y2, _ = ssd_chunked(x2, dt, a, bb, cc, d, chunk=16)
+    np.testing.assert_allclose(np.asarray(y[:, :t]), np.asarray(y2[:, :t]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_no_nan_long_chunk():
+    """Regression: masked i<j decay exponents overflowed to inf and
+    poisoned chunks with inf*0=NaN at chunk >= 64 (fixed by masking
+    inside the exponent)."""
+    key = jax.random.PRNGKey(2)
+    b, s, h, p, n = 2, 256, 4, 32, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) + 2.0)  # big dt
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, s, 1, n))
+    cc = jax.random.normal(ks[4], (b, s, 1, n))
+    d = jnp.ones((h,))
+    y, st = ssd_chunked(x, dt, a, bb, cc, d, chunk=128)
+    assert not bool(jnp.isnan(y).any())
+    assert not bool(jnp.isnan(st).any())
+
+
+def test_causal_conv_step_matches_full():
+    key = jax.random.PRNGKey(3)
+    b, s, c, kw = 2, 12, 8, 4
+    x = jax.random.normal(key, (b, s, c))
+    w = jax.random.normal(jax.random.PRNGKey(4), (kw, c))
+    full = causal_conv(x, w)
+    cache = jnp.zeros((b, kw - 1, c))
+    outs = []
+    for t in range(s):
+        yt, cache = causal_conv_step(cache, x[:, t], w)
+        outs.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SWA window semantics.
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_blocks_old_positions():
+    key = jax.random.PRNGKey(5)
+    b, s, h, g, hd, w = 1, 64, 2, 2, 16, 8
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, g, hd))
+    v = jax.random.normal(ks[2], (b, s, g, hd))
+    out = blocked_attention(q, k, v, window=w, block_q=16, block_k=16)
+    # perturbing positions more than `w` before t must not change out[t]
+    t = 40
+    k2 = k.at[:, :t - w].set(jax.random.normal(ks[3], (b, t - w, g, hd)))
+    out2 = blocked_attention(q, k2, v, window=w, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out[:, t:]),
+                               np.asarray(out2[:, t:]), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: capacity dispatch == dense reference when capacity is lossless.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("top_k,shared", [(1, 0), (2, 0), (2, 32)])
+def test_moe_matches_dense_reference(top_k, shared):
+    cfg = MoEConfig(num_experts=4, top_k=top_k, d_ff=32,
+                    capacity_factor=float(4 / top_k),  # C >= T*k/E: lossless
+                    shared_expert_ff=shared)
+    key = jax.random.PRNGKey(6)
+    t, d = 24, 16
+    x = jax.random.normal(key, (t, d), jnp.float32) * 0.5
+    from repro.models.moe import moe_decls
+    from repro.models.params import init_params
+    params = init_params(moe_decls(d, cfg), jax.random.PRNGKey(7))
+    got = moe_ffn(x, params, cfg)
+    want = moe_ffn_dense_reference(x, params, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@given(st.integers(1, 2), st.integers(8, 64))
+@settings(deadline=None, max_examples=20)
+def test_moe_capacity_bounds(top_k, tokens):
+    cfg = MoEConfig(num_experts=4, top_k=top_k, d_ff=8,
+                    capacity_factor=1.25)
+    c = capacity(tokens, cfg)
+    assert c >= 8 and c % 8 == 0
+    assert c * cfg.num_experts >= tokens * top_k           # cf >= 1
+
+
+def test_router_weights_normalized():
+    cfg = MoEConfig(num_experts=8, top_k=2, d_ff=8)
+    x = jax.random.normal(jax.random.PRNGKey(8), (16, 12))
+    router = jax.random.normal(jax.random.PRNGKey(9), (12, 8))
+    e, w = route(x, router, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert int(e.max()) < 8 and int(e.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization error bound.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000))
+@settings(deadline=None, max_examples=25)
+def test_quantize_kv_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 2, 16),
+                          jnp.float32)
+    q8, scale = quantize_kv(x)
+    deq = q8.astype(jnp.float32) * scale
+    err = jnp.abs(deq - x)
+    # per (token, head) error <= scale/2 (+ rounding epsilon)
+    assert bool(jnp.all(err <= scale * 0.5 + 1e-6))
+
+
+def test_decode_attention_quant_close_to_exact():
+    from repro.models.attention import decode_attention_quant
+    key = jax.random.PRNGKey(11)
+    b, s, h, g, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, g, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, g, hd), jnp.float32)
+    pos = jnp.int32(s - 1)
+    exact = decode_attention(q, k, v, pos)
+    k8, ksc = quantize_kv(k)
+    v8, vsc = quantize_kv(v)
+    approx = decode_attention_quant(q, k8, v8, ksc, vsc, pos, block=16)
+    np.testing.assert_allclose(np.asarray(approx, np.float32),
+                               np.asarray(exact, np.float32),
+                               rtol=0.05, atol=0.05)

@@ -1,0 +1,133 @@
+"""Protocol tests: SERIAL-RB oracle vs the faithful PARALLEL-RB simulator.
+
+Paper validation targets (§VI): identical optima for any core count, no
+search-node explored twice and none lost (full coverage), T_S <= T_R, and
+the GETPARENT topology of Fig. 6.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serial import (
+    INF, ParallelRBSimulator, PyProblem, get_next_parent, get_parent,
+    serial_rb,
+)
+from repro.problems import (
+    gnp_graph, make_dominating_set_py, make_subset_sum_py,
+    make_vertex_cover_py, random_regularish_graph,
+)
+
+
+def full_tree_problem(depth: int) -> PyProblem:
+    """Complete binary tree of the given depth; every leaf a solution of
+    value = leaf position (so the optimum is 0 and pruning never fires).
+    Used for exact node-coverage accounting."""
+
+    def root():
+        return (0, 0)   # (depth, position)
+
+    def apply(s, b):
+        d, p = s
+        return (d + 1, p * 2 + b)
+
+    def leaf_value(s):
+        d, p = s
+        return d == depth, p + 1      # value>0 so best stays comparable
+
+    def lower_bound(s):
+        return 0                      # no pruning: exhaustive
+
+    return PyProblem(name=f"full{depth}", max_depth=depth, root=root,
+                     apply=apply, leaf_value=leaf_value,
+                     lower_bound=lower_bound)
+
+
+# -- GETPARENT topology (Fig. 5 / Fig. 6) -----------------------------------
+
+def test_get_parent_figure6():
+    # Fig. 6, c=7: parents are 1->0, 2->0, 3->1, 4->0, 5->1, 6->2.
+    assert [get_parent(r, 7) for r in range(7)] == [0, 0, 0, 1, 0, 1, 2]
+
+
+def test_get_parent_even_odd_alternation():
+    # §IV-B: "When C_4 joins ... selects C_0" — powers of two go to 0.
+    for x in range(1, 8):
+        assert get_parent(2 ** x, 2 ** x + 1) == 0
+
+
+def test_get_next_parent_counts_passes():
+    parent, passes = 0, 0
+    seen = []
+    r, c = 2, 4
+    for _ in range(8):
+        parent, passes = get_next_parent(parent, r, c, passes)
+        seen.append(parent)
+    assert seen[:4] == [1, 3, 0, 1]   # skips r=2
+    # 8 probes over the 3-parent cycle {1,3,0} pass rank r at probes 2, 5, 8.
+    assert passes == 3
+
+
+# -- exhaustive coverage: no node twice, none lost ---------------------------
+
+@pytest.mark.parametrize("c", [1, 2, 3, 4, 7, 8])
+@pytest.mark.parametrize("depth", [3, 5, 7])
+def test_full_tree_coverage(c, depth):
+    serial_best, serial_nodes, _ = serial_rb(full_tree_problem(depth))
+    sim = ParallelRBSimulator(full_tree_problem(depth), c=c).run()
+    assert sim.best == serial_best == 1          # leftmost leaf p=0 -> value 1
+    # Exhaustive tree: parallel must visit exactly the serial node count —
+    # fewer means lost subtrees, more means double exploration.
+    assert sim.total_nodes == serial_nodes == 2 ** (depth + 1) - 1
+    assert sum(sim.t_s) >= 1
+    assert sum(sim.t_r) >= sum(sim.t_s) - 1      # T_S <= T_R (+root seed)
+
+
+@pytest.mark.parametrize("c", [2, 5, 8])
+def test_optimum_invariant_under_core_count_vc(c):
+    g = gnp_graph(16, 0.35, seed=5)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    sim = ParallelRBSimulator(make_vertex_cover_py(g), c=c).run()
+    assert sim.best == serial_best
+
+
+@pytest.mark.parametrize("c", [2, 6])
+def test_optimum_invariant_under_core_count_ds(c):
+    g = gnp_graph(12, 0.3, seed=9)
+    serial_best, _, _ = serial_rb(make_dominating_set_py(g))
+    sim = ParallelRBSimulator(make_dominating_set_py(g), c=c).run()
+    assert sim.best == serial_best
+
+
+@given(st.integers(2, 10), st.integers(0, 1000))
+@settings(deadline=None, max_examples=20)
+def test_subset_sum_sim_matches_serial(c, seed):
+    rng = np.random.RandomState(seed)
+    vals = rng.randint(1, 20, size=10).tolist()
+    target = int(sum(vals[:rng.randint(1, 6)]))
+    prob = make_subset_sum_py(vals, target)
+    serial_best, _, _ = serial_rb(prob)
+    sim = ParallelRBSimulator(make_subset_sum_py(vals, target), c=c).run()
+    assert sim.best == serial_best
+
+
+# -- speedup sanity: parallel makespan shrinks -------------------------------
+
+def test_makespan_decreases_with_cores():
+    # 4-regular graphs defeat degree pruning (the paper's 60-cell story,
+    # §VI): the ~1.5k-node tree is "sufficiently hard" for real speedup.
+    g = random_regularish_graph(40, 4, seed=1)
+    spans = {}
+    for c in (1, 4, 16):
+        sim = ParallelRBSimulator(make_vertex_cover_py(g), c=c).run()
+        spans[c] = sim.makespan
+    assert spans[4] < spans[1] / 2
+    assert spans[16] < spans[4]
+
+
+def test_delayed_bound_sharing_still_correct():
+    g = gnp_graph(14, 0.4, seed=21)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    sim = ParallelRBSimulator(make_vertex_cover_py(g), c=4,
+                              instant_bound_share=False).run()
+    assert sim.best == serial_best
