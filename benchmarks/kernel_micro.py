@@ -4,20 +4,37 @@ interpret-mode correctness deltas for the Pallas bodies).
 Absolute CPU µs are not TPU predictions; the table documents (a) the
 shapes each kernel is exercised at, (b) ref-vs-kernel max abs error, and
 (c) the ref path's CPU throughput as a regression canary.
+
+``run_node_eval`` additionally measures the solver's actual unit of work
+— fused ``Problem.evaluate`` nodes/sec, batched over lanes — for the
+legacy three-callback adapter, the fused jnp form and the fused+Pallas
+form, and records the trajectory in ``BENCH_node_eval.json`` at the repo
+root (DESIGN.md §3).  On CPU the Pallas variant runs the kernel body in
+interpret mode, so its absolute number is a correctness canary, not a
+speed claim.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timed, write_csv
+from repro.core.api import INF_VALUE
 from repro.kernels import ref
 from repro.kernels.bitset_degree import degree_argmax
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.problems.graphs import gnp_graph, full_mask
+from repro.problems.vertex_cover import (VCState, make_vertex_cover,
+                                         make_vertex_cover_callbacks)
+
+BENCH_JSON = os.path.normpath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_node_eval.json"))
 
 
 def run(quick: bool = False) -> list:
@@ -77,6 +94,48 @@ def run(quick: bool = False) -> list:
     return rows
 
 
+def _lane_states(graph, lanes: int) -> VCState:
+    """Batch of distinct mid-search states (varied alive masks) so the
+    evaluate benchmark sees realistic, non-constant-foldable inputs."""
+    key = jax.random.PRNGKey(0)
+    w = graph.words
+    keep = jax.random.bernoulli(key, 0.8, (lanes, graph.n))
+    masks = np.zeros((lanes, w), np.uint32)
+    kp = np.asarray(keep)
+    for l in range(lanes):
+        for v in range(graph.n):
+            if kp[l, v]:
+                masks[l, v // 32] |= np.uint32(1) << np.uint32(v % 32)
+    full = np.asarray(full_mask(graph.n))
+    return VCState(alive=jnp.asarray(masks),
+                   cover=jnp.asarray((~masks) & full[None, :]),
+                   size=jnp.asarray(np.bitwise_count(
+                       (~masks) & full[None, :]).sum(axis=1).astype(np.int32)))
+
+
+def run_node_eval(quick: bool = False) -> dict:
+    """Legacy vs fused vs fused+Pallas node-evaluation throughput."""
+    n, p, lanes = (60, 0.15, 16) if quick else (128, 0.1, 64)
+    g = gnp_graph(n, p, seed=7)
+    states = _lane_states(g, lanes)
+    variants = [
+        ("legacy_callbacks", make_vertex_cover_callbacks(g)),
+        ("fused_jnp", make_vertex_cover(g)),
+        ("fused_pallas", make_vertex_cover(g, backend="pallas")),
+    ]
+    out = {"instance": f"gnp:{n}:{int(p * 100)}:7", "lanes": lanes,
+           "unit": "node evaluations / second (CPU; pallas = interpret)",
+           "variants": {}}
+    for name, prob in variants:
+        fn = jax.jit(jax.vmap(lambda s: prob.evaluate(s, INF_VALUE)))
+        t, _ = timed(lambda: jax.block_until_ready(fn(states)))
+        out["variants"][name] = {
+            "sec_per_batch": round(t, 6),
+            "nodes_per_sec": round(lanes / t, 1),
+        }
+    return out
+
+
 def main(quick: bool = False) -> None:
     rows = run(quick)
     path = write_csv("kernel_micro.csv", rows,
@@ -85,6 +144,15 @@ def main(quick: bool = False) -> None:
         print("kernels,%s,%s,%s,%s" % (r["kernel"], r["shape"],
                                        r["ref_ms"], r["max_abs_err"]))
     print(f"kernel_micro -> {path}")
+
+    node_eval = run_node_eval(quick)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(node_eval, f, indent=2)
+        f.write("\n")
+    for name, v in node_eval["variants"].items():
+        print("node_eval,%s,%s,%s" % (name, v["sec_per_batch"],
+                                      v["nodes_per_sec"]))
+    print(f"node_eval -> {BENCH_JSON}")
 
 
 if __name__ == "__main__":

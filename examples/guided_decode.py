@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import BinaryProblem
 from repro.core.distributed import solve
-from repro.core.serial import PyProblem, serial_rb
+from repro.core.serial import PyNodeEval, PyProblem, serial_rb
 from repro.models import model as M
 from repro.models.config import ArchConfig
 from repro.models.model import Shardings, make_ctx
@@ -66,28 +65,29 @@ def build_lattice(seed: int = 0):
 
 
 def make_problem(expand):
-    """State: (depth, prefix tokens, accumulated -logprob)."""
+    """State: (depth, prefix tokens, accumulated -logprob).
+
+    Fused evaluate: one ``expand`` call yields the solution test, the bound
+    and BOTH children in one pass (expand itself memoizes per prefix, so
+    the LM forward runs once per lattice node either way — the point here
+    is the protocol shape, not a forward-count saving).
+    """
 
     def root():
         return (0, (), 0)
 
-    def apply(state, bit):
+    def evaluate(state, best):
         d, prefix, cost = state
-        ids, lps = expand(prefix)
-        tok = int(ids[bit])
-        return (d + 1, prefix + (tok,), cost + int(-lps[bit] * SCALE))
-
-    def leaf_value(state):
-        d, _, cost = state
-        return d == DEPTH, cost
-
-    def lower_bound(state):
-        d, _, cost = state
-        return cost          # admissible: future steps cost >= 0
+        if d >= DEPTH:              # leaf: children are never taken
+            return PyNodeEval(True, cost, cost, state, state)
+        ids, lps = expand(prefix)   # the one shared LM forward
+        left = (d + 1, prefix + (int(ids[0]),), cost + int(-lps[0] * SCALE))
+        right = (d + 1, prefix + (int(ids[1]),), cost + int(-lps[1] * SCALE))
+        # bound: achieved cost (admissible — future steps cost >= 0)
+        return PyNodeEval(False, cost, cost, left, right)
 
     return PyProblem(name="guided-decode", max_depth=DEPTH, root=root,
-                     apply=apply, leaf_value=leaf_value,
-                     lower_bound=lower_bound)
+                     evaluate=evaluate)
 
 
 def main() -> None:

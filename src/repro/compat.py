@@ -1,0 +1,38 @@
+"""Version shims for the jax APIs that moved between 0.4.x and >= 0.5.
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``;
+* its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+
+Everything in-repo imports ``shard_map`` from here and passes the check
+flag via ``check=``.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
+
+
+def axis_size(name: str):
+    """``lax.axis_size`` (jax >= 0.5) with the 0.4.x psum fallback; only
+    valid inside a collective context (shard_map / pmap / vmap axis)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    import jax.numpy as jnp
+    return jax.lax.psum(jnp.int32(1), name)

@@ -1,19 +1,24 @@
 """The paper's contribution: indexed search trees + parallel backtracking.
 
 Public API:
-  BinaryProblem          — problem protocol (jnp, engine form)
-  PyProblem              — problem protocol (scalar oracle form)
+  BinaryProblem          — fused-evaluate problem protocol (jnp, engine form)
+  NodeEval               — the fused per-node evaluation record
+  PyProblem / PyNodeEval — problem protocol (scalar oracle form)
   solve                  — distributed solver driver (single- or multi-device)
   serial_rb              — SERIAL-RB oracle
   ParallelRBSimulator    — faithful PARALLEL-RB protocol simulator
+
+Legacy three-callback problems adapt via ``BinaryProblem.from_callbacks`` /
+``PyProblem.from_callbacks`` (DESIGN.md §1).
 """
 
 from repro.core.api import (  # noqa: F401
-    DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE, BinaryProblem,
+    DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE, BinaryProblem, NodeEval,
+    tree_select,
 )
 from repro.core.serial import (  # noqa: F401
-    INF, ParallelRBSimulator, PyProblem, SimResult, get_next_parent,
-    get_parent, serial_rb,
+    INF, ParallelRBSimulator, PyNodeEval, PyProblem, SimResult,
+    get_next_parent, get_parent, serial_rb,
 )
 from repro.core.distributed import SolveStats, solve  # noqa: F401
 from repro.core.engine import Lanes, init_lanes  # noqa: F401

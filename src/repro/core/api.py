@@ -11,13 +11,35 @@ A problem is expressed against a *binary* search tree (the paper's primary
 setting; ``repro.core.indexing`` also implements the arbitrary-branching
 encoding of §IV-C).  Each node either branches into exactly two children
 (``left = bit 0``, ``right = bit 1``) or is a terminal (leaf / pruned).
+
+Fused protocol (DESIGN.md §1).  A problem provides ONE callback::
+
+    evaluate(state, best) -> NodeEval(is_solution, value, lower_bound,
+                                      left, right, payload)
+
+The engine visits exactly one search-node per lane per step, and that visit
+is exactly one ``evaluate`` call — the paper's unit of work (§III-D).  All
+per-node intermediates (degree vectors, alive masks, branch-vertex picks)
+are computed once inside ``evaluate`` and shared between the solution test,
+the bound, and both children.  The previous three-callback protocol
+(``apply`` / ``leaf_value`` / ``lower_bound``) paid for those intermediates
+up to four times per visit; :meth:`BinaryProblem.from_callbacks` adapts such
+legacy problems unchanged.
+
+Determinism contract: ``left``, ``right`` and ``payload`` must NOT depend on
+``best`` — the incumbent may legally influence only pruning (via
+``lower_bound``), never the tree shape, or replayed tasks would diverge from
+their donors.  Unused ``NodeEval`` fields are dead-code-eliminated by XLA,
+so e.g. CONVERTINDEX replay (which only consumes one child) does not pay for
+the bound computation.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 PyTree = Any
@@ -30,6 +52,39 @@ RIGHT = jnp.int8(1)
 
 #: "Infinite" objective for minimization problems (int32-safe).
 INF_VALUE = jnp.int32(2**30)
+
+
+class NodeEval(NamedTuple):
+    """Everything the engine needs from one search-node, in one pass.
+
+    Attributes:
+      is_solution: bool — this node is a *solution* leaf.  Non-solution
+        terminals (infeasible nodes) return False and rely on
+        ``lower_bound >= best`` (use INF_VALUE) to become terminal.
+      value: int32 — objective value if ``is_solution`` (arbitrary otherwise).
+      lower_bound: int32 — admissible lower bound on the best objective in
+        the subtree rooted here.  The engine prunes when ``lower_bound >=
+        best_so_far`` (strictly-better search, mirroring the paper's
+        IsSolution).
+      left: state pytree — the bit-0 child.  Must be total: it is computed
+        under branchless vectorized code even at terminal nodes, where it is
+        discarded.
+      right: state pytree — the bit-1 child (same totality requirement).
+      payload: pytree — the actual solution (e.g. the cover bitset) recorded
+        when this node improves the incumbent.
+    """
+
+    is_solution: jnp.ndarray
+    value: jnp.ndarray
+    lower_bound: jnp.ndarray
+    left: PyTree
+    right: PyTree
+    payload: PyTree
+
+
+def tree_select(pred: jnp.ndarray, a: PyTree, b: PyTree) -> PyTree:
+    """Branchless pytree blend: ``a`` where ``pred`` else ``b``."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,31 +100,58 @@ class BinaryProblem:
       max_depth: static bound D_MAX on the tree depth (root is depth 0; any
         node satisfies depth <= max_depth).
       root: () -> state — the root search-node.
-      apply: (state, bit:int32) -> state — descend to the left (0) or right
-        (1) child.  Must be total: called under ``lax.cond``-free vectorized
-        code, it may be invoked on terminal states whose result is discarded.
-      leaf_value: (state) -> (is_solution_leaf: bool, value: int32) — whether
-        this node is a *solution* leaf and its objective value.  Non-solution
-        terminals (infeasible nodes) must return (False, anything).
-      lower_bound: (state) -> int32 — admissible lower bound on the best
-        objective in the subtree rooted here.  The engine prunes when
-        ``lower_bound(state) >= best_so_far`` (we search for strictly better
-        solutions, mirroring IsSolution in the paper).  Terminal/infeasible
-        nodes should return INF_VALUE so that arity becomes 0.
-      solution_payload: (state) -> pytree — the actual solution (e.g. the
-        cover bitset) recorded when a new incumbent is found.
+      evaluate: (state, best:int32) -> NodeEval — the fused per-node
+        callback (see module docstring for the contract).
       payload_zero: () -> pytree — zero-initialized payload of the same
-        structure/shape (used to allocate incumbent buffers).
+        structure/shape as ``NodeEval.payload`` (used to allocate incumbent
+        buffers).
     """
 
     name: str
     max_depth: int
     root: Callable[[], PyTree]
-    apply: Callable[[PyTree, jnp.ndarray], PyTree]
-    leaf_value: Callable[[PyTree], tuple]
-    lower_bound: Callable[[PyTree], jnp.ndarray]
-    solution_payload: Callable[[PyTree], PyTree]
+    evaluate: Callable[[PyTree, jnp.ndarray], NodeEval]
     payload_zero: Callable[[], PyTree]
+
+    @classmethod
+    def from_callbacks(cls, *, name: str, max_depth: int,
+                       root: Callable[[], PyTree],
+                       apply: Callable[[PyTree, jnp.ndarray], PyTree],
+                       leaf_value: Callable[[PyTree], tuple],
+                       lower_bound: Callable[[PyTree], jnp.ndarray],
+                       solution_payload: Callable[[PyTree], PyTree],
+                       payload_zero: Callable[[], PyTree]) -> "BinaryProblem":
+        """Adapt a legacy three-callback problem to the fused protocol.
+
+        The adapter simply calls every legacy callback inside one
+        ``evaluate`` — correct but without intermediate sharing, so each
+        node visit still pays ``leaf_value + lower_bound + 2×apply``.
+        Problems on hot paths should implement ``evaluate`` natively.
+        """
+
+        def evaluate(state: PyTree, best: jnp.ndarray) -> NodeEval:
+            is_sol, val = leaf_value(state)
+            return NodeEval(
+                is_solution=is_sol,
+                value=val,
+                lower_bound=lower_bound(state),
+                left=apply(state, jnp.int32(0)),
+                right=apply(state, jnp.int32(1)),
+                payload=solution_payload(state),
+            )
+
+        return cls(name=name, max_depth=max_depth, root=root,
+                   evaluate=evaluate, payload_zero=payload_zero)
+
+    def apply(self, state: PyTree, bit: jnp.ndarray) -> PyTree:
+        """Descend to the left (0) or right (1) child.
+
+        Derived from ``evaluate``; the unused NodeEval fields are dead code
+        under jit, so CONVERTINDEX replay costs one shared-intermediate pass
+        per edge.
+        """
+        ev = self.evaluate(state, INF_VALUE)
+        return tree_select(bit == 0, ev.left, ev.right)
 
     def arity(self, state: PyTree, best: jnp.ndarray) -> jnp.ndarray:
         """Number of children: 0 when leaf or pruned by bound, else 2.
@@ -78,6 +160,6 @@ class BinaryProblem:
         branch-and-reduce pruning rule: a child is generated only while the
         node can still beat the incumbent.
         """
-        is_leaf, _ = self.leaf_value(state)
-        pruned = self.lower_bound(state) >= best
-        return jnp.where(is_leaf | pruned, jnp.int32(0), jnp.int32(2))
+        ev = self.evaluate(state, best)
+        pruned = ev.lower_bound >= best
+        return jnp.where(ev.is_solution | pruned, jnp.int32(0), jnp.int32(2))

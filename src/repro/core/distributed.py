@@ -39,8 +39,10 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.compat import shard_map
 
 from repro.core.api import UNVISITED, INF_VALUE, BinaryProblem
 from repro.core import steal
@@ -61,15 +63,8 @@ def _axis_rank(axis_names: Sequence[str]) -> jnp.ndarray:
     """Linearized device rank over (possibly multiple) mesh axes."""
     rank = jnp.int32(0)
     for name in axis_names:
-        rank = rank * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        rank = rank * compat.axis_size(name) + jax.lax.axis_index(name)
     return rank
-
-
-def _num_devices(axis_names: Sequence[str]) -> int:
-    n = 1
-    for name in axis_names:
-        n *= jax.lax.axis_size(name)
-    return n
 
 
 def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
@@ -115,29 +110,33 @@ def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
     world = jax.lax.all_gather(payload, ax, tiled=False).reshape(
         -1, max_ship, il + 2)                               # [D, S, IL+2]
 
-    # (4) claim by global rank arithmetic.
+    # (4) claim by global rank arithmetic.  ``install_tasks`` hands row k to
+    # the k-th idle lane (its thief-rank contract), so rows here MUST be
+    # indexed by local thief rank, not by lane id — per-lane rows silently
+    # drop tasks whenever the idle lanes are not a prefix of the lane ids
+    # (the dropped task is already DELEGATED at its donor: a lost subtree).
     task_counts = quota                                     # tasks from dev j
     task_offset = jnp.cumsum(task_counts) - task_counts
     thief_offset = (jnp.cumsum(demands) - demands)[me]
-
     n_tasks_total = jnp.sum(task_counts)
-    my_idle_rank = jnp.cumsum(idle) - idle                  # per-lane
-    my_global_rank = thief_offset + my_idle_rank            # [W]
 
     # Flatten world tasks in (device, slot) order; the g-th valid global task
     # lives at flat position: device j with task_offset[j] <= g <
     # task_offset[j]+quota[j], slot g - task_offset[j].
-    g = jnp.clip(my_global_rank, 0, jnp.maximum(n_tasks_total - 1, 0))
+    rank = jnp.arange(w, dtype=jnp.int32)                   # local thief rank
+    grank = thief_offset + rank                             # global thief rank
+    claim = (rank < demand_local) & (grank < n_tasks_total)
+    g = jnp.clip(grank, 0, jnp.maximum(n_tasks_total - 1, 0))
     src_dev = jnp.sum((task_offset[None, :] <= g[:, None]).astype(jnp.int32),
                       axis=1) - 1
     src_dev = jnp.clip(src_dev, 0, world.shape[0] - 1)
     src_slot = jnp.clip(g - task_offset[src_dev], 0, max_ship - 1)
-    got = (~lanes.active) & (my_global_rank < n_tasks_total)
 
     recv = world[src_dev, src_slot]                         # [W, IL+2]
-    rbits = jnp.where(got[:, None], recv[:, :il].astype(jnp.int8), UNVISITED)
-    rdepth = jnp.where(got, recv[:, il], 0)
-    rvalid = got & (recv[:, il + 1] > 0)
+    rbits = jnp.where(claim[:, None], recv[:, :il].astype(jnp.int8),
+                      UNVISITED)
+    rdepth = jnp.where(claim, recv[:, il], 0)
+    rvalid = claim & (recv[:, il + 1] > 0)
 
     lanes = lanes._replace(t_r=lanes.t_r + (~lanes.active).astype(jnp.int32))
     return steal.install_tasks(problem, lanes, rbits, rdepth, rvalid)
@@ -192,7 +191,7 @@ def make_distributed_round(problem: BinaryProblem, mesh: Mesh,
         for f in Lanes._fields})
 
     fn = shard_map(round_fn, mesh=mesh, in_specs=(in_specs,),
-                   out_specs=(in_specs, P()), check_vma=False)
+                   out_specs=(in_specs, P()), check=False)
     return jax.jit(fn)
 
 

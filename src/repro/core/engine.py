@@ -4,8 +4,8 @@ A *lane* is the TPU analogue of the paper's "core": an independent depth-first
 searcher whose entire control state is the paper's ``current_idx`` array plus
 a stack of search-node states along the live root-to-node path.  ``W`` lanes
 advance in lockstep under ``vmap``; one *engine step* visits exactly one
-search-node per active lane (one ``Problem.apply`` evaluation — the unit the
-paper's butterfly-effect analysis in §III-D counts).
+search-node per active lane (one fused ``Problem.evaluate`` call — the unit
+the paper's butterfly-effect analysis in §III-D counts).
 
 Control encoding per lane (paper Fig. 2/3 semantics):
 
@@ -32,7 +32,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE, BinaryProblem
+from repro.core.api import (DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE,
+                            BinaryProblem, tree_select)
 
 PyTree = Any
 
@@ -104,8 +105,9 @@ def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
     plus (improved, value, payload) for incumbent election across lanes.
 
     Branchless: every path is computed and blended with ``where`` so the
-    function vmaps over lanes with no divergence. ``apply`` is evaluated
-    exactly once per step (the hot spot).
+    function vmaps over lanes with no divergence. ``evaluate`` is called
+    exactly once per step — the fused node visit is the hot spot, and all
+    per-node intermediates are shared inside it (DESIGN.md §1).
     """
     il = idx.shape[0]
     d = jnp.clip(depth, 0, il - 1)
@@ -114,8 +116,8 @@ def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
     c = idx[d]
     first = c == UNVISITED
 
-    is_sol, val = problem.leaf_value(state)
-    lb = problem.lower_bound(state)
+    ev = problem.evaluate(state, best)
+    is_sol, val, lb = ev.is_solution, ev.value, ev.lower_bound
 
     improved = active & first & is_sol & (val < best)
     best_eff = jnp.where(improved, val, best)
@@ -125,8 +127,7 @@ def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
     # from a completed left subtree.
     take_right = (~first) & (c == LEFT)
     descend = active & ((first & ~terminal) | take_right)
-    bit = jnp.where(first, jnp.int32(0), jnp.int32(1))
-    child = problem.apply(state, bit)
+    child = tree_select(first, ev.left, ev.right)
 
     wpos = jnp.clip(d + 1, 0, il)  # stack has one extra slot
     new_stack = jax.tree_util.tree_map(
@@ -150,9 +151,8 @@ def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
     new_depth = jnp.maximum(new_depth, 0)
 
     visited = active & first
-    payload = problem.solution_payload(state)
     return (new_idx, new_depth, new_active, new_stack, visited,
-            improved, jnp.where(improved, val, INF_VALUE), payload)
+            improved, jnp.where(improved, val, INF_VALUE), ev.payload)
 
 
 def make_step(problem: BinaryProblem):
@@ -213,8 +213,9 @@ def replay_path(problem: BinaryProblem, bits: jnp.ndarray,
     Starting from the root, re-applies the branch decisions ``bits[0..path_
     depth-1]`` (delegation marks already flattened to LEFT by FIXINDEX).
     Fills ``stack[j]`` for j = 0..path_depth and returns the new stack.  The
-    cost is O(D_MAX) ``apply`` calls — the paper's serial-overhead term,
-    incurred once per received task.
+    cost is O(D_MAX) child derivations (``Problem.apply``, i.e. ``evaluate``
+    with the non-child outputs dead-code-eliminated) — the paper's
+    serial-overhead term, incurred once per received task.
     """
     il = bits.shape[0]
     root = problem.root()

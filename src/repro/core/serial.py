@@ -17,8 +17,10 @@ Three artifacts live here, all pure Python (no JAX), used as oracles:
    per-core T_S / T_R match the paper's Tables I/II semantics.
 
 3. ``PyProblem`` — the problem protocol for the scalar world (plain Python
-   callables).  ``repro.problems`` exposes each problem in both forms and
-   tests assert the jnp engine agrees with this simulator node-for-node.
+   callables), mirroring the fused ``evaluate`` protocol of
+   :class:`repro.core.api.BinaryProblem`.  ``repro.problems`` exposes each
+   problem in both forms and tests assert the jnp engine agrees with this
+   simulator node-for-node.
 
 The simulator is the **paper-faithful baseline** recorded in EXPERIMENTS.md;
 the BSP/JAX engine in ``repro.core.engine``/``distributed`` is the TPU-native
@@ -29,11 +31,22 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 from repro.core.indexing import fix_index, get_heaviest_task_index
 
 INF = 2 ** 30
+
+
+class PyNodeEval(NamedTuple):
+    """Scalar twin of :class:`repro.core.api.NodeEval` (no payload — the
+    oracle only tracks objective values, not solution artifacts)."""
+
+    is_solution: bool
+    value: int
+    lower_bound: int
+    left: Any
+    right: Any
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,17 +54,39 @@ class PyProblem:
     """Scalar (pure-Python) version of :class:`repro.core.api.BinaryProblem`.
 
     Semantics match the jnp form exactly: binary tree, minimization,
-    deterministic branching.  ``apply`` must be side-effect free (returns a
-    new state); the stepper keeps the explicit stack, which is the scalar
-    analogue of the paper's undo-based backtracking (§III-D).
+    deterministic branching, one fused ``evaluate(state, best) ->
+    PyNodeEval`` per node visit.  ``evaluate`` must be side-effect free
+    (children are new states) and its children must not depend on ``best``;
+    the stepper keeps the explicit stack, which is the scalar analogue of
+    the paper's undo-based backtracking (§III-D).
     """
 
     name: str
     max_depth: int
     root: Callable[[], Any]
-    apply: Callable[[Any, int], Any]
-    leaf_value: Callable[[Any], Tuple[bool, int]]
-    lower_bound: Callable[[Any], int]
+    evaluate: Callable[[Any, int], PyNodeEval]
+
+    @classmethod
+    def from_callbacks(cls, *, name: str, max_depth: int,
+                       root: Callable[[], Any],
+                       apply: Callable[[Any, int], Any],
+                       leaf_value: Callable[[Any], Tuple[bool, int]],
+                       lower_bound: Callable[[Any], int]) -> "PyProblem":
+        """Adapt a legacy three-callback scalar problem (no fusion: each
+        node visit pays ``leaf_value + lower_bound + 2×apply``)."""
+
+        def evaluate(state: Any, best: int) -> PyNodeEval:
+            is_sol, val = leaf_value(state)
+            return PyNodeEval(is_sol, val, lower_bound(state),
+                              apply(state, 0), apply(state, 1))
+
+        return cls(name=name, max_depth=max_depth, root=root,
+                   evaluate=evaluate)
+
+    def apply(self, state: Any, bit: int) -> Any:
+        """Derived child generation (CONVERTINDEX replay uses this)."""
+        ev = self.evaluate(state, INF)
+        return ev.left if bit == 0 else ev.right
 
 
 class _DFS:
@@ -102,24 +137,25 @@ class _DFS:
 
         if c == self.UNVISITED:                      # first arrival: visit node
             self.nodes += 1
-            is_sol, v = self.p.leaf_value(state)
-            if is_sol and v < best:                  # IsSolution (Fig. 3 l.5-6)
-                improved, val, best = True, v, v
-            pruned = self.p.lower_bound(state) >= best
-            if is_sol or pruned:                     # leaf: backtrack (l.7-8)
+            ev = self.p.evaluate(state, best)        # ONE fused node visit
+            if ev.is_solution and ev.value < best:   # IsSolution (Fig. 3 l.5-6)
+                improved, val, best = True, ev.value, ev.value
+            pruned = ev.lower_bound >= best
+            if ev.is_solution or pruned:             # leaf: backtrack (l.7-8)
                 self._backtrack()
             else:                                    # descend left (l.13-16)
-                self._descend(0)
+                self._descend(0, ev.left)
         elif c == 0:                                 # left done: go right
-            self._descend(1)
+            ev = self.p.evaluate(state, best)
+            self._descend(1, ev.right)
         else:                                        # c in {1, -1}: exhausted
             self._backtrack()
         return improved, val
 
-    def _descend(self, bit: int) -> None:
+    def _descend(self, bit: int, child: Any) -> None:
         d = self.depth
         self.idx[d] = bit
-        self.stack[d + 1] = self.p.apply(self.stack[d], bit)
+        self.stack[d + 1] = child
         if d + 1 <= self.p.max_depth:
             self.idx[d + 1] = self.UNVISITED
         self.depth = d + 1

@@ -1,18 +1,22 @@
-"""Pallas TPU kernel: fused masked-popcount degree + argmax vertex pick.
+"""Pallas TPU kernel: fused masked-popcount degree stats for vertex cover.
 
 The solver's hot spot (paper §V): at every search-node, compute the degree
 of every alive vertex in the residual graph — popcount(adj[v] & alive) —
-and pick the max-degree vertex with smallest-id tie-break.  The jnp form
-(repro.problems.vertex_cover) materializes an [n, w] masked matrix per
-lane; this kernel fuses mask+popcount+argmax over vertex tiles so only the
-running (best_degree, best_vertex) pair leaves VMEM.
+then (a) pick the max-degree vertex with smallest-id tie-break (the branch
+rule) and (b) sum the alive degrees (= 2·m_alive, the bound's numerator).
+The jnp form (repro.problems.vertex_cover) materializes an [n, w] masked
+matrix per lane; this kernel fuses mask+popcount+argmax+sum over vertex
+tiles so only the running (best_degree, best_vertex, degree_sum) triple
+leaves VMEM.  One kernel launch per fused ``Problem.evaluate`` — the whole
+per-node degree work in a single pass (DESIGN.md §3).
 
 Grid: ``(lanes, vertex_tiles)`` — tile axis sequential, accumulating into
 the output ref.  Ascending tile order + strict ">" update preserves the
 paper's determinism rule (ties -> smallest id).  Popcount is
 ``jax.lax.population_count`` on uint32 words (VPU-friendly bitwise ops).
 
-Validated interpret=True against ref.degree_argmax.
+Validated interpret=True against ref.degree_stats_ref; batching (vmap over
+lane masks, as the engine does) lifts into an extra grid dimension.
 """
 
 from __future__ import annotations
@@ -32,8 +36,9 @@ def _kernel(adj_ref, alive_ref, out_ref, *, tile: int, n: int, words: int):
 
     @pl.when(t == 0)
     def _init():
-        out_ref[0, 0] = neg          # best degree
+        out_ref[0, 0] = neg          # best degree (-1: no alive vertex)
         out_ref[0, 1] = neg          # best vertex
+        out_ref[0, 2] = jnp.int32(0)  # sum of alive degrees (2 * m_alive)
 
     adj = adj_ref[...]               # [tile, words] uint32
     alive = alive_ref[...]           # [1, words] uint32
@@ -58,13 +63,15 @@ def _kernel(adj_ref, alive_ref, out_ref, *, tile: int, n: int, words: int):
     better = tile_best > best        # strict: earlier tile wins ties
     out_ref[0, 0] = jnp.where(better, tile_best, best)
     out_ref[0, 1] = jnp.where(better, tile_arg, out_ref[0, 1])
+    out_ref[0, 2] = out_ref[0, 2] + jnp.sum(jnp.maximum(degs, 0))
 
 
-def degree_argmax(adj: jnp.ndarray, alive: jnp.ndarray, *,
-                  tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+def degree_stats(adj: jnp.ndarray, alive: jnp.ndarray, *,
+                 tile: int = 128, interpret: bool = True) -> jnp.ndarray:
     """adj: uint32[n, w] packed adjacency; alive: uint32[L, w] per-lane
-    masks.  Returns int32[L, 2] = (best_degree, best_vertex); degree -1
-    when no vertex is alive."""
+    masks.  Returns int32[L, 3] = (best_degree, best_vertex, degree_sum);
+    (-1, -1, 0) when no vertex is alive.  ``degree_sum`` is the sum of
+    alive-vertex degrees, i.e. twice the residual edge count."""
     n, w = adj.shape
     lanes = alive.shape[0]
     n_pad = (-n) % tile
@@ -79,8 +86,14 @@ def degree_argmax(adj: jnp.ndarray, alive: jnp.ndarray, *,
             pl.BlockSpec((tile, w), lambda l, t: (t, 0)),
             pl.BlockSpec((1, w), lambda l, t: (l, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 2), lambda l, t: (l, 0)),
-        out_shape=jax.ShapeDtypeStruct((lanes, 2), jnp.int32),
+        out_specs=pl.BlockSpec((1, 3), lambda l, t: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 3), jnp.int32),
         interpret=interpret,
     )(adj, alive)
     return out
+
+
+def degree_argmax(adj: jnp.ndarray, alive: jnp.ndarray, *,
+                  tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Compatibility wrapper: int32[L, 2] = (best_degree, best_vertex)."""
+    return degree_stats(adj, alive, tile=tile, interpret=interpret)[:, :2]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bitset_degree import degree_argmax as _degree_pallas
+from repro.kernels.bitset_degree import degree_stats as _degree_stats_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -55,6 +56,20 @@ def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 64,
                            interpret=(not _on_tpu()) if interpret is None
                            else interpret)
     return ref.ssd_scan_ref(x, dt, a, b, c, d, chunk=chunk)
+
+
+@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
+def degree_stats(adj, alive, *, tile: int = 128,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(best_degree, best_vertex, degree_sum) per lane — the fused
+    vertex-cover node statistics (see problems.vertex_cover)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _degree_stats_pallas(adj, alive, tile=tile,
+                                    interpret=(not _on_tpu()) if interpret
+                                    is None else interpret)
+    return ref.degree_stats_ref(adj, alive)
 
 
 @partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))

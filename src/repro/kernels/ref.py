@@ -2,7 +2,8 @@
 
 flash_attention -> repro.models.attention.blocked_attention
 ssd_scan        -> repro.models.ssm.ssd_chunked
-bitset_degree   -> degree_argmax below (mirrors problems.vertex_cover)
+bitset_degree   -> degree_stats / degree_argmax below (mirrors
+                   problems.vertex_cover)
 """
 
 from __future__ import annotations
@@ -18,8 +19,10 @@ def ssd_scan_ref(x, dt, a, b, c, d, chunk: int = 64):
     return ssd_chunked(x, dt, a, b, c, d, chunk=chunk)
 
 
-def degree_argmax_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
-    """adj uint32[n, w]; alive uint32[L, w] -> int32[L, 2]."""
+def degree_stats_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """adj uint32[n, w]; alive uint32[L, w] -> int32[L, 3] of
+    (best_degree, best_vertex, degree_sum); (-1, -1, 0) when nothing is
+    alive.  ``degree_sum`` = twice the residual edge count."""
     n, w = adj.shape
 
     def one(mask):
@@ -32,6 +35,13 @@ def degree_argmax_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
         degs = jnp.where(is_alive, degs, jnp.int32(-1))
         best = jnp.max(degs)
         arg = jnp.argmax(degs).astype(jnp.int32)   # first max = smallest id
-        return jnp.stack([best, jnp.where(best < 0, jnp.int32(-1), arg)])
+        total = jnp.sum(jnp.maximum(degs, 0))
+        return jnp.stack([best, jnp.where(best < 0, jnp.int32(-1), arg),
+                          total])
 
     return jax.vmap(one)(alive)
+
+
+def degree_argmax_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """adj uint32[n, w]; alive uint32[L, w] -> int32[L, 2]."""
+    return degree_stats_ref(adj, alive)[:, :2]

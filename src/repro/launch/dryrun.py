@@ -240,6 +240,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     memstats = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     counts = analyze_hlo(hlo)
     terms = counts.terms(PEAK_FLOPS_BF16, HBM_BW, ICI_BW)

@@ -33,6 +33,8 @@ def parse_instance(spec: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", choices=["vc", "ds"], default="vc")
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+                    help="vc node-evaluation kernel backend")
     ap.add_argument("--instance", default="reg:48:4:1")
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--steps-per-round", type=int, default=64)
@@ -42,8 +44,8 @@ def main() -> None:
     args = ap.parse_args()
 
     g = parse_instance(args.instance)
-    prob = (make_vertex_cover if args.problem == "vc"
-            else make_dominating_set)(g)
+    prob = (make_vertex_cover(g, backend=args.backend)
+            if args.problem == "vc" else make_dominating_set(g))
     print(f"{prob.name}: n={g.n} m={g.m} lanes={args.lanes}")
     t0 = time.time()
     payload, stats, _ = solve(

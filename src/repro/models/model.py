@@ -186,10 +186,11 @@ class Shardings:
             dp_n *= sizes_[a]
 
         def build(token_spec):
-            return jax.shard_map(
+            from repro.compat import shard_map
+            return shard_map(
                 body, mesh=self.mesh,
                 in_specs=(token_spec, pspecs),
-                out_specs=token_spec, check_vma=False)
+                out_specs=token_spec, check=False)
 
         sharded = build(P(dp if dp else None, None))
         replicated = build(P(None, None))

@@ -15,6 +15,9 @@ from repro.problems.graphs import (  # noqa: F401
     Graph, gnp_graph, circulant_graph, cell60_graph, pack_adjacency,
     random_regularish_graph,
 )
-from repro.problems.vertex_cover import make_vertex_cover, make_vertex_cover_py  # noqa: F401
+from repro.problems.vertex_cover import (  # noqa: F401
+    make_degree_stats_fn, make_vertex_cover, make_vertex_cover_callbacks,
+    make_vertex_cover_py,
+)
 from repro.problems.dominating_set import make_dominating_set, make_dominating_set_py  # noqa: F401
 from repro.problems.subset_sum import make_subset_sum, make_subset_sum_py  # noqa: F401

@@ -10,18 +10,24 @@ Bound: ``|D| + ceil(undominated / best_coverage)`` (admissible — every
 further pick dominates at most ``best_coverage`` new vertices).  A node
 with undominated vertices but zero possible coverage is infeasible
 (INF bound, arity 0).
+
+Fused node evaluation: the coverage vector (masked popcount over closed
+neighborhoods) and the undominated count are computed ONCE per node visit
+and shared between the solution test, the bound and both children — the
+pre-fusion three-callback form recomputed the coverage vector in both
+``apply`` and ``lower_bound``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import INF_VALUE, BinaryProblem
-from repro.core.serial import INF, PyProblem
+from repro.core.api import INF_VALUE, BinaryProblem, NodeEval
+from repro.core.serial import INF, PyNodeEval, PyProblem
 from repro.problems.graphs import Graph, bit, full_mask
 
 
@@ -47,14 +53,6 @@ def make_dominating_set(graph: Graph) -> BinaryProblem:
     shift = jnp.asarray((np.arange(n, dtype=np.int32) % 32).astype(np.uint32))
     one = jnp.uint32(1)
 
-    def cand_flags(cand):
-        return ((cand[word] >> shift) & one) == one
-
-    def coverage(state: DSState) -> jnp.ndarray:      # int32[n], -1 for non-cand
-        undom = jnp.bitwise_and(cadj, jnp.bitwise_not(state.dominated)[None, :])
-        cov = jax.lax.population_count(undom).sum(axis=1).astype(jnp.int32)
-        return jnp.where(cand_flags(state.cand), cov, jnp.int32(-1))
-
     def vbit(v):
         return jnp.where(jnp.arange(w) == (v // 32),
                          one << (v.astype(jnp.uint32) % 32), jnp.uint32(0))
@@ -63,38 +61,41 @@ def make_dominating_set(graph: Graph) -> BinaryProblem:
         return DSState(dominated=jnp.zeros(w, jnp.uint32), cand=fullm,
                        chosen=jnp.zeros(w, jnp.uint32), size=jnp.int32(0))
 
-    def apply(state: DSState, b: jnp.ndarray) -> DSState:
-        cov = coverage(state)
-        v = jnp.argmax(cov).astype(jnp.int32)
-        bv = vbit(v)
-        take = b == 0
-        dominated = jnp.where(take, jnp.bitwise_or(state.dominated, cadj[v]),
-                              state.dominated)
-        return DSState(
-            dominated=dominated,
-            cand=jnp.bitwise_and(state.cand, jnp.bitwise_not(bv)),
-            chosen=jnp.where(take, jnp.bitwise_or(state.chosen, bv),
-                             state.chosen),
-            size=state.size + jnp.where(take, jnp.int32(1), jnp.int32(0)))
+    def evaluate(state: DSState, best: jnp.ndarray) -> NodeEval:
+        # The ONE coverage pass: |N[v] \ dominated| for every candidate v.
+        undom_rows = jnp.bitwise_and(
+            cadj, jnp.bitwise_not(state.dominated)[None, :])
+        cov = jax.lax.population_count(undom_rows).sum(axis=1).astype(
+            jnp.int32)
+        cand_f = ((state.cand[word] >> shift) & one) == one
+        cov = jnp.where(cand_f, cov, jnp.int32(-1))
 
-    def undom_count(state):
+        # Undominated count (one popcount of the complement).
         rem = jnp.bitwise_and(fullm, jnp.bitwise_not(state.dominated))
-        return jax.lax.population_count(rem).sum().astype(jnp.int32)
+        u = jax.lax.population_count(rem).sum().astype(jnp.int32)
+        is_sol = u == 0
 
-    def leaf_value(state: DSState) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return undom_count(state) == 0, state.size
-
-    def lower_bound(state: DSState) -> jnp.ndarray:
-        u = undom_count(state)
-        best_cov = jnp.max(coverage(state))
+        # Bound from the shared coverage vector.
+        best_cov = jnp.max(cov)
         infeasible = (u > 0) & (best_cov <= 0)
         need = (u + jnp.maximum(best_cov, 1) - 1) // jnp.maximum(best_cov, 1)
-        return jnp.where(infeasible, INF_VALUE, state.size + need)
+        lb = jnp.where(infeasible, INF_VALUE, state.size + need)
+
+        # Children from the shared branch vertex.
+        v = jnp.argmax(cov).astype(jnp.int32)
+        bv = vbit(v)
+        new_cand = jnp.bitwise_and(state.cand, jnp.bitwise_not(bv))
+        left = DSState(dominated=jnp.bitwise_or(state.dominated, cadj[v]),
+                       cand=new_cand,
+                       chosen=jnp.bitwise_or(state.chosen, bv),
+                       size=state.size + 1)
+        right = DSState(dominated=state.dominated, cand=new_cand,
+                        chosen=state.chosen, size=state.size)
+        return NodeEval(is_solution=is_sol, value=state.size, lower_bound=lb,
+                        left=left, right=right, payload=state.chosen)
 
     return BinaryProblem(
-        name=f"ds[{graph.name}]", max_depth=n, root=root, apply=apply,
-        leaf_value=leaf_value, lower_bound=lower_bound,
-        solution_payload=lambda s: s.chosen,
+        name=f"ds[{graph.name}]", max_depth=n, root=root, evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32))
 
 
@@ -105,14 +106,6 @@ def make_dominating_set_py(graph: Graph) -> PyProblem:
     word = np.arange(n, dtype=np.int32) // 32
     shift = (np.arange(n, dtype=np.int32) % 32).astype(np.uint32)
 
-    def cand_flags(cand):
-        return ((cand[word] >> shift) & np.uint32(1)) == 1
-
-    def coverage(state):
-        dominated, cand = state[0], state[1]
-        cov = np.bitwise_count(cadj & ~dominated[None, :]).sum(axis=1).astype(np.int64)
-        return np.where(cand_flags(cand), cov, -1)
-
     def vbit(v):
         out = np.zeros(w, np.uint32)
         out[v // 32] = np.uint32(1) << np.uint32(v % 32)
@@ -122,28 +115,29 @@ def make_dominating_set_py(graph: Graph) -> PyProblem:
         return (np.zeros(w, np.uint32), fullm.copy(),
                 np.zeros(w, np.uint32), 0)
 
-    def apply(state, b):
+    def evaluate(state, best):
         dominated, cand, chosen, size = state
-        v = int(np.argmax(coverage(state)))
-        bv = vbit(v)
-        if b == 0:
-            return (dominated | cadj[v], cand & ~bv, chosen | bv, size + 1)
-        return (dominated, cand & ~bv, chosen, size)
+        cov = np.bitwise_count(cadj & ~dominated[None, :]).sum(
+            axis=1).astype(np.int64)
+        cand_f = ((cand[word] >> shift) & np.uint32(1)) == 1
+        cov = np.where(cand_f, cov, -1)
 
-    def undom_count(state):
-        return int(np.bitwise_count(fullm & ~state[0]).sum())
+        u = int(np.bitwise_count(fullm & ~dominated).sum())
+        is_sol = u == 0
 
-    def leaf_value(state):
-        return undom_count(state) == 0, state[3]
-
-    def lower_bound(state):
-        u = undom_count(state)
-        best_cov = int(np.max(coverage(state)))
+        best_cov = int(np.max(cov))
         if u > 0 and best_cov <= 0:
-            return INF
-        bc = max(best_cov, 1)
-        return state[3] + (u + bc - 1) // bc
+            lb = INF
+        else:
+            bc = max(best_cov, 1)
+            lb = size + (u + bc - 1) // bc
 
-    return PyProblem(
-        name=f"ds[{graph.name}]", max_depth=n, root=root, apply=apply,
-        leaf_value=leaf_value, lower_bound=lower_bound)
+        v = int(np.argmax(cov))
+        bv = vbit(v)
+        new_cand = cand & ~bv
+        left = (dominated | cadj[v], new_cand, chosen | bv, size + 1)
+        right = (dominated, new_cand, chosen, size)
+        return PyNodeEval(is_sol, size, lb, left, right)
+
+    return PyProblem(name=f"ds[{graph.name}]", max_depth=n, root=root,
+                     evaluate=evaluate)

@@ -6,17 +6,20 @@ practical problems").  Given positive ints and a target, find the smallest
 subset summing exactly to the target.  Left child takes item ``pos``,
 right child skips it; depth == item position, so the tree is binary with
 depth exactly n and the indexed encoding applies unchanged.
+
+The fused ``evaluate`` is trivial here (no expensive shared intermediates),
+which makes this the minimal example of the protocol.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import INF_VALUE, BinaryProblem
-from repro.core.serial import INF, PyProblem
+from repro.core.api import INF_VALUE, BinaryProblem, NodeEval
+from repro.core.serial import INF, PyNodeEval, PyProblem
 
 
 class SSState(NamedTuple):
@@ -39,30 +42,27 @@ def make_subset_sum(values, target: int) -> BinaryProblem:
         return SSState(pos=jnp.int32(0), total=jnp.int32(0),
                        count=jnp.int32(0), mask=jnp.zeros(n, jnp.int32))
 
-    def apply(s: SSState, b: jnp.ndarray) -> SSState:
+    def evaluate(s: SSState, best: jnp.ndarray) -> NodeEval:
         p = jnp.clip(s.pos, 0, n - 1)
-        take = b == 0
-        return SSState(
-            pos=s.pos + 1,
-            total=s.total + jnp.where(take, vals[p], jnp.int32(0)),
-            count=s.count + jnp.where(take, jnp.int32(1), jnp.int32(0)),
-            mask=s.mask.at[p].set(jnp.where(take, 1, s.mask[p])))
+        is_sol = (s.pos >= n) & (s.total == tgt)
 
-    def leaf_value(s: SSState) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return (s.pos >= n) & (s.total == tgt), s.count
-
-    def lower_bound(s: SSState) -> jnp.ndarray:
-        p = jnp.clip(s.pos, 0, n)
+        pc = jnp.clip(s.pos, 0, n)
         overshoot = s.total > tgt
-        unreachable = s.total + suffix[p] < tgt
+        unreachable = s.total + suffix[pc] < tgt
         done_wrong = (s.pos >= n) & (s.total != tgt)
         bad = overshoot | unreachable | done_wrong
-        return jnp.where(bad, INF_VALUE, s.count + (s.total != tgt))
+        lb = jnp.where(bad, INF_VALUE, s.count + (s.total != tgt))
+
+        left = SSState(pos=s.pos + 1, total=s.total + vals[p],
+                       count=s.count + 1, mask=s.mask.at[p].set(1))
+        right = SSState(pos=s.pos + 1, total=s.total, count=s.count,
+                        mask=s.mask)
+        return NodeEval(is_solution=is_sol, value=s.count, lower_bound=lb,
+                        left=left, right=right, payload=s.mask)
 
     return BinaryProblem(
-        name=f"subset_sum[n={n}]", max_depth=n, root=root, apply=apply,
-        leaf_value=leaf_value, lower_bound=lower_bound,
-        solution_payload=lambda s: s.mask,
+        name=f"subset_sum[n={n}]", max_depth=n, root=root,
+        evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(n, jnp.int32))
 
 
@@ -76,25 +76,21 @@ def make_subset_sum_py(values, target: int) -> PyProblem:
     def root():
         return (0, 0, 0)
 
-    def apply(s, b):
+    def evaluate(s, best):
         pos, total, count = s
         p = min(pos, n - 1)
-        if b == 0:
-            return (pos + 1, total + vals[p], count + 1)
-        return (pos + 1, total, count)
+        is_sol = pos >= n and total == target
 
-    def leaf_value(s):
-        pos, total, count = s
-        return pos >= n and total == target, count
-
-    def lower_bound(s):
-        pos, total, count = s
-        p = min(pos, n)
-        if total > target or total + suffix[p] < target or \
+        pc = min(pos, n)
+        if total > target or total + suffix[pc] < target or \
                 (pos >= n and total != target):
-            return INF
-        return count + (1 if total != target else 0)
+            lb = INF
+        else:
+            lb = count + (1 if total != target else 0)
 
-    return PyProblem(
-        name=f"subset_sum[n={n}]", max_depth=n, root=root, apply=apply,
-        leaf_value=leaf_value, lower_bound=lower_bound)
+        left = (pos + 1, total + vals[p], count + 1)
+        right = (pos + 1, total, count)
+        return PyNodeEval(is_sol, count, lb, left, right)
+
+    return PyProblem(name=f"subset_sum[n={n}]", max_depth=n, root=root,
+                     evaluate=evaluate)

@@ -1,0 +1,65 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The CI image bundles hypothesis; some dev containers don't.  This shim
+implements the tiny strategy subset the suite uses (``integers``,
+``sampled_from``, ``lists``) and replays ``max_examples`` seeded random
+examples per test, so the property tests still exercise many inputs —
+just without shrinking or example databases.  Import via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def _lists(elem, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elem.sample(rng)
+                     for _ in range(rng.randint(min_size, max_size))])
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                             lists=_lists)
+
+
+def settings(deadline=None, max_examples=20, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the example parameters (it would resolve them as fixtures).
+        def wrapper():
+            n = getattr(fn, "_stub_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*[s.sample(rng) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -30,7 +30,11 @@ from repro.problems import (
 
 def full_tree_problem_jnp(depth: int) -> BinaryProblem:
     """Exhaustive complete binary tree (same as the serial twin in
-    test_serial_protocol) — exact node accounting, pruning never fires."""
+    test_serial_protocol) — exact node accounting, pruning never fires.
+
+    Built through the legacy-callback adapter, which doubles as its
+    regression test: the engine must drive adapted problems identically.
+    """
 
     def root():
         return (jnp.int32(0), jnp.int32(0))
@@ -43,7 +47,7 @@ def full_tree_problem_jnp(depth: int) -> BinaryProblem:
         d, p = s
         return d == depth, p + 1
 
-    return BinaryProblem(
+    return BinaryProblem.from_callbacks(
         name=f"full{depth}", max_depth=depth, root=root, apply=apply,
         leaf_value=leaf_value,
         lower_bound=lambda s: jnp.int32(0),

@@ -10,7 +10,10 @@ The invariants come straight from the paper:
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # shim: see _hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.api import DELEGATED, LEFT, RIGHT, UNVISITED
 from repro.core.indexing import (

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.bitset_degree import degree_argmax
+from repro.kernels.bitset_degree import degree_argmax, degree_stats
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.problems.graphs import gnp_graph
@@ -167,3 +167,42 @@ def test_degree_argmax_tie_break_smallest_id():
     alive = jnp.asarray(full_mask(g.n))[None, :]
     got = degree_argmax(adj, alive, tile=32, interpret=True)
     assert got[0, 0] == 4 and got[0, 1] == 0
+
+
+@pytest.mark.parametrize("n,p,lanes,tile", [
+    (60, 0.2, 4, 32), (200, 0.1, 8, 128), (300, 0.05, 2, 128),
+    (128, 0.5, 16, 64),
+])
+def test_degree_stats_matches_ref(n, p, lanes, tile):
+    """The fused (degree, argmax, degree-sum) triple behind vertex cover's
+    single-pass evaluate (DESIGN.md §3) — exact match vs the jnp oracle."""
+    g = gnp_graph(n, p, seed=n + 1)
+    adj = jnp.asarray(g.adj)
+    alive = jax.random.bernoulli(jax.random.PRNGKey(n + 1), 0.6, (lanes, n))
+    w = adj.shape[1]
+    masks = np.zeros((lanes, w), np.uint32)
+    av = np.asarray(alive)
+    for l in range(lanes):
+        for v in range(n):
+            if av[l, v]:
+                masks[l, v // 32] |= np.uint32(1) << np.uint32(v % 32)
+    masks = jnp.asarray(masks)
+    got = degree_stats(adj, masks, tile=tile, interpret=True)
+    want = ref.degree_stats_ref(adj, masks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_degree_stats_all_dead_and_vmap():
+    g = gnp_graph(40, 0.3, seed=2)
+    adj = jnp.asarray(g.adj)
+    masks = jnp.zeros((3, adj.shape[1]), jnp.uint32)
+    got = np.asarray(degree_stats(adj, masks, interpret=True))
+    np.testing.assert_array_equal(got, np.full((3, 3), [-1, -1, 0]))
+    # vmap over lane masks (as the engine does) must match the flat call.
+    from repro.problems.graphs import full_mask
+    alive = jnp.tile(jnp.asarray(full_mask(g.n))[None, :], (4, 1))
+    flat = degree_stats(adj, alive, tile=32, interpret=True)
+    mapped = jax.vmap(
+        lambda m: degree_stats(adj, m[None, :], tile=32, interpret=True)[0]
+    )(alive)
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(flat))

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # shim: see _hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.models.attention import (blocked_attention, decode_attention,
                                     quantize_kv)

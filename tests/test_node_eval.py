@@ -1,0 +1,151 @@
+"""Fused node-evaluation protocol tests (DESIGN.md §1/§3).
+
+Three properties of the refactor:
+
+1. FUSION — the fused vertex-cover ``evaluate`` performs exactly ONE
+   degree computation per node visit, while the legacy three-callback
+   adapter pays one per callback (4 total).
+2. ADAPTER EQUIVALENCE — a problem adapted via ``from_callbacks`` drives
+   the engine through the identical search tree as its native fused form.
+3. BACKEND INVARIANCE — the Pallas ``degree_stats`` backend is bitwise
+   identical to the jnp backend: same NodeEval on every reachable state,
+   same tree node-for-node as the serial oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import INF_VALUE, BinaryProblem
+from repro.core.distributed import solve
+from repro.core.engine import init_lanes, make_expand
+from repro.core.serial import serial_rb
+from repro.problems import (
+    gnp_graph, random_regularish_graph,
+    make_degree_stats_fn, make_vertex_cover, make_vertex_cover_callbacks,
+    make_vertex_cover_py,
+)
+
+
+# -- 1. fusion: one degree pass per node visit --------------------------------
+
+def test_fused_evaluate_single_degree_pass():
+    """Acceptance criterion: exactly one degree computation per node."""
+    g = gnp_graph(16, 0.35, seed=5)
+    calls = {"n": 0}
+    base = make_degree_stats_fn(g, backend="jnp")
+
+    def counting(alive):
+        calls["n"] += 1
+        return base(alive)
+
+    prob = make_vertex_cover(g, stats_fn=counting)
+    state = prob.root()
+    for _ in range(4):                    # walk a few nodes eagerly
+        before = calls["n"]
+        ev = prob.evaluate(state, INF_VALUE)
+        assert calls["n"] == before + 1   # ONE pass services the whole visit
+        state = ev.left
+
+    # Tracing the engine step embeds exactly one pass per lane-step too.
+    calls["n"] = 0
+    jax.make_jaxpr(lambda l: make_expand(prob, 1)(l))(init_lanes(prob, 1))
+    assert calls["n"] == 1
+
+
+def test_legacy_adapter_pays_per_callback():
+    """The pre-fusion baseline really did recompute degrees per callback —
+    the measured gap the refactor closes (motivation, not a regression)."""
+    g = gnp_graph(16, 0.35, seed=5)
+    counter = {"n": 0}
+    prob = make_vertex_cover_callbacks(g, degrees_counter=counter)
+    prob.evaluate(prob.root(), INF_VALUE)
+    assert counter["n"] >= 3              # leaf_value + lower_bound + applys
+
+
+# -- 2. adapter equivalence ---------------------------------------------------
+
+@pytest.mark.parametrize("n,p,seed", [(14, 0.3, 0), (16, 0.35, 5)])
+def test_adapter_walks_identical_tree(n, p, seed):
+    g = gnp_graph(n, p, seed=seed)
+    serial_best, serial_nodes, _ = serial_rb(make_vertex_cover_py(g))
+    for prob in (make_vertex_cover(g), make_vertex_cover_callbacks(g)):
+        lanes = init_lanes(prob, 1)
+        lanes = make_expand(prob, 200_000)(lanes)
+        assert not bool(lanes.active.any())
+        assert int(lanes.best) == serial_best
+        assert int(lanes.nodes.sum()) == serial_nodes
+
+
+# -- 3. pallas backend == jnp backend -----------------------------------------
+
+@pytest.mark.parametrize("n,p,seed", [(14, 0.3, 0), (16, 0.35, 5)])
+def test_pallas_backend_matches_serial_tree(n, p, seed):
+    """Node-for-node: the Pallas-backed engine walks the oracle's tree."""
+    g = gnp_graph(n, p, seed=seed)
+    serial_best, serial_nodes, _ = serial_rb(make_vertex_cover_py(g))
+    prob = make_vertex_cover(g, backend="pallas", tile=32)
+    lanes = init_lanes(prob, 1)
+    lanes = make_expand(prob, 200_000)(lanes)
+    assert not bool(lanes.active.any())
+    assert int(lanes.best) == serial_best
+    assert int(lanes.nodes.sum()) == serial_nodes
+
+
+def test_pallas_backend_nodeeval_bitwise_identical():
+    """Every NodeEval field agrees between backends along a search walk."""
+    g = gnp_graph(18, 0.3, seed=7)
+    pj = make_vertex_cover(g)
+    pp = make_vertex_cover(g, backend="pallas", tile=32)
+    frontier = [pj.root()]
+    seen = 0
+    while frontier and seen < 40:
+        state = frontier.pop()
+        ej = pj.evaluate(state, INF_VALUE)
+        ep = pp.evaluate(state, INF_VALUE)
+        for a, b in zip(jax.tree_util.tree_leaves(ej),
+                        jax.tree_util.tree_leaves(ep)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        seen += 1
+        if not bool(ej.is_solution):
+            frontier += [ej.left, ej.right]
+
+
+def test_pallas_backend_multilane_solve():
+    """Steals + CONVERTINDEX replay also route through the kernel."""
+    g = gnp_graph(16, 0.35, seed=5)
+    serial_best, _, _ = serial_rb(make_vertex_cover_py(g))
+    payload, stats, _ = solve(make_vertex_cover(g, backend="pallas", tile=32),
+                              num_lanes=4, steps_per_round=64,
+                              bootstrap_rounds=2, bootstrap_steps=4)
+    assert stats.best == serial_best
+    assert int(np.bitwise_count(np.asarray(payload)).sum()) == serial_best
+
+
+def test_backend_rejects_unknown():
+    g = gnp_graph(8, 0.3, seed=0)
+    with pytest.raises(ValueError):
+        make_vertex_cover(g, backend="cuda")
+
+
+# -- derived helpers ----------------------------------------------------------
+
+def test_derived_apply_matches_children():
+    g = gnp_graph(14, 0.3, seed=3)
+    prob = make_vertex_cover(g)
+    s = prob.root()
+    ev = prob.evaluate(s, INF_VALUE)
+    for bit, child in ((0, ev.left), (1, ev.right)):
+        got = prob.apply(s, jnp.int32(bit))
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(child)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_arity_from_evaluate():
+    g = gnp_graph(14, 0.3, seed=3)
+    prob = make_vertex_cover(g)
+    root = prob.root()
+    assert int(prob.arity(root, INF_VALUE)) == 2        # root branches
+    assert int(prob.arity(root, jnp.int32(0))) == 0     # bound prunes all

@@ -7,7 +7,10 @@ the GETPARENT topology of Fig. 6.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # shim: see _hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.serial import (
     INF, ParallelRBSimulator, PyProblem, get_next_parent, get_parent,
@@ -38,9 +41,9 @@ def full_tree_problem(depth: int) -> PyProblem:
     def lower_bound(s):
         return 0                      # no pruning: exhaustive
 
-    return PyProblem(name=f"full{depth}", max_depth=depth, root=root,
-                     apply=apply, leaf_value=leaf_value,
-                     lower_bound=lower_bound)
+    return PyProblem.from_callbacks(
+        name=f"full{depth}", max_depth=depth, root=root, apply=apply,
+        leaf_value=leaf_value, lower_bound=lower_bound)
 
 
 # -- GETPARENT topology (Fig. 5 / Fig. 6) -----------------------------------
