@@ -16,7 +16,8 @@ import argparse
 import time
 
 from benchmarks import (fig10_steal_traffic, kernel_micro, roofline_table,
-                        table1_vertex_cover, table2_dominating_set)
+                        service_throughput, table1_vertex_cover,
+                        table2_dominating_set)
 
 SUITES = [
     ("table1", table1_vertex_cover.main),
@@ -24,6 +25,7 @@ SUITES = [
     ("fig10", fig10_steal_traffic.main),
     ("kernels", kernel_micro.main),
     ("roofline", roofline_table.main),
+    ("service", service_throughput.main),
 ]
 
 

@@ -1,0 +1,134 @@
+"""Service throughput: continuous batching vs sequential per-instance solves.
+
+The headline claim of the solver service (DESIGN.md §Solver service): K
+mixed instances multiplexed over ONE lane pool finish faster than K
+dedicated ``solve`` calls run back-to-back with the same lane count.  Two
+effects compound:
+
+  * compilation amortization — the stacked tables are jit *arguments*, so
+    the service compiles one round for the whole stream, while each
+    sequential ``solve`` retraces its instance-specific closures;
+  * tail packing — a draining instance's idle lanes are immediately
+    retargeted to other tenants instead of spinning until the slowest
+    lane finishes.
+
+Writes ``BENCH_service.json`` at the repo root and a CSV artifact; every
+optimum is asserted against the serial oracle before timing is reported.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import write_csv
+from repro.core.distributed import solve
+from repro.core.serial import serial_rb
+from repro.problems import (gnp_graph, make_dominating_set,
+                            make_dominating_set_py, make_vertex_cover,
+                            make_vertex_cover_py, random_regularish_graph)
+from repro.service import SolveRequest, SolverService
+
+OUT = os.path.normpath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_service.json"))
+
+LANES = 32
+SLOTS = 4
+STEPS = 64
+
+
+def instance_mix(quick: bool):
+    """K = 8 mixed vc + ds instances of varied sizes (K = 4 quick)."""
+    mix = [
+        ("vc", gnp_graph(18, 0.30, seed=7)),
+        ("ds", gnp_graph(14, 0.25, seed=2)),
+        ("vc", random_regularish_graph(20, 4, seed=3)),
+        ("ds", gnp_graph(12, 0.30, seed=9)),
+        ("vc", gnp_graph(16, 0.35, seed=5)),
+        ("ds", gnp_graph(13, 0.30, seed=4)),
+        ("vc", gnp_graph(20, 0.25, seed=11)),
+        ("ds", gnp_graph(15, 0.25, seed=6)),
+    ]
+    return mix[:4] if quick else mix
+
+
+def oracle(family: str, graph) -> int:
+    py = (make_vertex_cover_py(graph) if family == "vc"
+          else make_dominating_set_py(graph))
+    return serial_rb(py)[0]
+
+
+def run_sequential(mix, oracles) -> float:
+    """Timed region covers ONLY the solves (oracle checks run outside)."""
+    t0 = time.perf_counter()
+    best = []
+    for family, graph in mix:
+        prob = (make_vertex_cover(graph) if family == "vc"
+                else make_dominating_set(graph))
+        _, stats, _ = solve(prob, num_lanes=LANES, steps_per_round=STEPS,
+                            bootstrap_rounds=2, bootstrap_steps=4)
+        best.append(stats.best)
+    wall = time.perf_counter() - t0
+    for (family, graph), got, want in zip(mix, best, oracles):
+        assert got == want, (graph.name, got, want)
+    return wall
+
+
+def run_service(mix, oracles) -> float:
+    max_n = max(g.n for _, g in mix)
+    svc = SolverService(max_n=max_n, slots=SLOTS, num_lanes=LANES,
+                        steps_per_round=STEPS)
+    reqs = [SolveRequest(rid=i, graph=g, family=fam)
+            for i, (fam, g) in enumerate(mix)]
+    t0 = time.perf_counter()
+    results = svc.run(reqs)
+    wall = time.perf_counter() - t0
+    for i, ((family, graph), want) in enumerate(zip(mix, oracles)):
+        assert results[i].optimum == want, (graph.name, results[i].optimum)
+    return wall
+
+
+def run(quick: bool = False) -> dict:
+    mix = instance_mix(quick)
+    k = len(mix)
+    oracles = [oracle(fam, g) for fam, g in mix]
+    seq = run_sequential(mix, oracles)
+    svc = run_service(mix, oracles)
+    out = {
+        "workload": [f"{fam}:{g.name}" for fam, g in mix],
+        "k_instances": k,
+        "lanes": LANES,
+        "slots": SLOTS,
+        "steps_per_round": STEPS,
+        "unit": "instances / second (CPU; end-to-end incl. compilation)",
+        "sequential": {"wall_s": round(seq, 3),
+                       "instances_per_sec": round(k / seq, 3)},
+        "service": {"wall_s": round(svc, 3),
+                    "instances_per_sec": round(k / svc, 3)},
+        "speedup": round(seq / svc, 2),
+    }
+    return out
+
+
+def main(quick: bool = False) -> None:
+    out = run(quick)
+    rows = [{"mode": m, "wall_s": out[m]["wall_s"],
+             "instances_per_sec": out[m]["instances_per_sec"]}
+            for m in ("sequential", "service")]
+    path = write_csv("service_throughput.csv", rows,
+                     ["mode", "wall_s", "instances_per_sec"])
+    print(json.dumps(out, indent=1))
+    if not quick:
+        with open(OUT, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        print(f"service -> {OUT}")
+    print(f"service -> {path}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(ap.parse_args().quick)

@@ -37,7 +37,7 @@ the bound computation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +105,15 @@ class BinaryProblem:
       payload_zero: () -> pytree — zero-initialized payload of the same
         structure/shape as ``NodeEval.payload`` (used to allocate incumbent
         buffers).
+      num_instances: K — how many independent problem *instances* this
+        problem multiplexes (the solver-service path).  Ordinary problems
+        leave it at 1; a stacked problem (``repro.service.batch_problem``)
+        sets K > 1, keeps a per-lane instance id inside its state, and the
+        engine maintains a per-instance incumbent table of length K.
+      instance_root: optional (inst:int32) -> state — per-instance root for
+        K > 1 problems (CONVERTINDEX replay of a stolen task must start
+        from the root of the task's OWN instance).  ``None`` means
+        ``root()`` is instance-independent.
     """
 
     name: str
@@ -112,6 +121,8 @@ class BinaryProblem:
     root: Callable[[], PyTree]
     evaluate: Callable[[PyTree, jnp.ndarray], NodeEval]
     payload_zero: Callable[[], PyTree]
+    num_instances: int = 1
+    instance_root: Optional[Callable[[jnp.ndarray], PyTree]] = None
 
     @classmethod
     def from_callbacks(cls, *, name: str, max_depth: int,
@@ -163,3 +174,10 @@ class BinaryProblem:
         ev = self.evaluate(state, best)
         pruned = ev.lower_bound >= best
         return jnp.where(ev.is_solution | pruned, jnp.int32(0), jnp.int32(2))
+
+
+def root_of(problem: BinaryProblem, inst: jnp.ndarray) -> PyTree:
+    """Root of instance ``inst`` — `root()` for single-instance problems."""
+    if problem.instance_root is not None:
+        return problem.instance_root(inst)
+    return problem.root()

@@ -5,18 +5,22 @@ The paper observes that under indexed search trees, checkpointing is
 current_idx to some file".  We implement exactly that, plus the elastic
 half the paper only gestures at (join-leave):
 
-* ``save`` — persist every lane's ``(idx, depth, base, active)`` plus the
-  incumbent to a single ``.npz``.  The *entire* solver state is O(W · D_MAX)
-  int8 — the compact-encoding payoff again; stacks are NOT saved, they are
-  reconstructed by CONVERTINDEX replay on restore.
+* ``save`` — persist every lane's ``(idx, depth, base, inst, active)`` plus
+  the per-instance incumbent table to a single ``.npz``.  The *entire*
+  solver state is O(W · D_MAX) int8 — the compact-encoding payoff again;
+  stacks are NOT saved, they are reconstructed by CONVERTINDEX replay on
+  restore.  ``extra`` lets callers (the solver service) ride metadata
+  arrays in the same atomic file.
 
 * ``restore`` — rebuild ``Lanes`` for an arbitrary new lane count W'
   (elastic shrink/grow).  The first W' active tasks are installed directly;
   any surplus is returned as a host-side *pending pool* the driver feeds to
-  idle lanes at round boundaries (``repro.core.distributed.solve`` consumes
-  it).  Nothing is ever lost or explored twice: an installed lane resumes
-  from its exact ``current_idx`` (delegation marks intact), and pool entries
-  are unmodified lane images.
+  idle lanes at round boundaries (``repro.core.distributed.solve`` and
+  ``repro.service.driver`` consume it).  Nothing is ever lost or explored
+  twice: an installed lane resumes from its exact ``current_idx``
+  (delegation marks intact), and pool entries are unmodified lane images —
+  each tagged with its instance, so multi-tenant restores keep tenant
+  isolation.
 """
 
 from __future__ import annotations
@@ -24,7 +28,7 @@ from __future__ import annotations
 import io
 import os
 import tempfile
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,14 +37,22 @@ import numpy as np
 from repro.core.api import UNVISITED, INF_VALUE, BinaryProblem
 from repro.core.engine import Lanes, init_lanes, replay_path
 
+_EXTRA_PREFIX = "extra_"
 
-def save(path: str, lanes: Lanes) -> None:
-    """Atomically persist lane control state + incumbent (not the stacks)."""
-    payload_leaves, payload_def = jax.tree_util.tree_flatten(lanes.best_payload)
+
+def save(path: str, lanes: Lanes,
+         extra: Optional[Dict[str, np.ndarray]] = None) -> None:
+    """Atomically persist lane control state + incumbents (not the stacks).
+
+    ``extra`` arrays are stored under an ``extra_`` prefix and returned by
+    :func:`read_extra` — the service driver uses this for its slot tables.
+    """
+    payload_leaves, _ = jax.tree_util.tree_flatten(lanes.best_payload)
     arrays = {
         "idx": np.asarray(lanes.idx, dtype=np.int8),
         "depth": np.asarray(lanes.depth, dtype=np.int32),
         "base": np.asarray(lanes.base, dtype=np.int32),
+        "inst": np.asarray(lanes.inst, dtype=np.int32),
         "active": np.asarray(lanes.active),
         "best": np.asarray(lanes.best, dtype=np.int32),
         "nodes": np.asarray(lanes.nodes, dtype=np.int32),
@@ -51,6 +63,8 @@ def save(path: str, lanes: Lanes) -> None:
     }
     for i, leaf in enumerate(payload_leaves):
         arrays[f"payload_{i}"] = np.asarray(leaf)
+    for key, val in (extra or {}).items():
+        arrays[_EXTRA_PREFIX + key] = np.asarray(val)
     buf = io.BytesIO()
     np.savez(buf, **arrays)
     data = buf.getvalue()
@@ -68,13 +82,23 @@ def save(path: str, lanes: Lanes) -> None:
             os.unlink(tmp)
 
 
+def read_extra(path: str) -> Dict[str, np.ndarray]:
+    """Read back the ``extra`` arrays stored by :func:`save`."""
+    out = {}
+    with np.load(path) as z:
+        for key in z.files:
+            if key.startswith(_EXTRA_PREFIX):
+                out[key[len(_EXTRA_PREFIX):]] = z[key]
+    return out
+
+
 class PendingTask:
-    """A not-yet-installed lane image (elastic surplus)."""
+    """A not-yet-installed lane image (elastic surplus), instance-tagged."""
 
-    __slots__ = ("idx", "depth", "base")
+    __slots__ = ("idx", "depth", "base", "inst")
 
-    def __init__(self, idx: np.ndarray, depth: int, base: int):
-        self.idx, self.depth, self.base = idx, depth, base
+    def __init__(self, idx: np.ndarray, depth: int, base: int, inst: int = 0):
+        self.idx, self.depth, self.base, self.inst = idx, depth, base, inst
 
 
 def restore(path: str, problem: BinaryProblem, num_lanes: int
@@ -83,7 +107,9 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
     with np.load(path) as z:
         idx = z["idx"]
         depth, base, active = z["depth"], z["base"], z["active"]
-        best = int(z["best"])
+        inst = (z["inst"] if "inst" in z
+                else np.zeros(idx.shape[0], np.int32))
+        best = np.atleast_1d(np.asarray(z["best"], np.int32))
         payload_leaves = []
         i = 0
         while f"payload_{i}" in z:
@@ -93,6 +119,10 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
         steps = int(z["steps"])
 
     lanes = init_lanes(problem, num_lanes, seed_root=False)
+    if best.shape[0] != problem.num_instances:
+        raise ValueError(
+            f"checkpoint has {best.shape[0]} instance slots, problem has "
+            f"{problem.num_instances}; elastic restore varies LANES, not K")
     proto = jax.tree_util.tree_structure(lanes.best_payload)
     payload = (jax.tree_util.tree_unflatten(
         proto, [jnp.asarray(l) for l in payload_leaves])
@@ -105,16 +135,19 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
     new_idx = np.full((num_lanes, il), int(UNVISITED), np.int8)
     new_depth = np.zeros((num_lanes,), np.int32)
     new_base = np.zeros((num_lanes,), np.int32)
+    new_inst = np.zeros((num_lanes,), np.int32)
     new_active = np.zeros((num_lanes,), bool)
     for j, k in enumerate(installed):
         w = min(il, idx.shape[1])
         new_idx[j, :w] = idx[k, :w]
-        new_depth[j], new_base[j], new_active[j] = depth[k], base[k], True
+        new_depth[j], new_base[j] = depth[k], base[k]
+        new_inst[j], new_active[j] = inst[k], True
 
     lanes = lanes._replace(
         idx=jnp.asarray(new_idx), depth=jnp.asarray(new_depth),
-        base=jnp.asarray(new_base), active=jnp.asarray(new_active),
-        best=jnp.int32(best), best_payload=payload,
+        base=jnp.asarray(new_base), inst=jnp.asarray(new_inst),
+        active=jnp.asarray(new_active),
+        best=jnp.asarray(best), best_payload=payload,
         steps=jnp.int32(steps))
     lanes = rebuild_stacks(problem, lanes)
 
@@ -126,7 +159,8 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
         t_r=lanes.t_r.at[0].add(carry["t_r"]),
         donated=lanes.donated.at[0].add(carry["donated"]))
 
-    pool = [PendingTask(idx[k].copy(), int(depth[k]), int(base[k]))
+    pool = [PendingTask(idx[k].copy(), int(depth[k]), int(base[k]),
+                        int(inst[k]))
             for k in pending]
     return lanes, pool
 
@@ -136,12 +170,15 @@ def rebuild_stacks(problem: BinaryProblem, lanes: Lanes) -> Lanes:
 
     The path to a lane's *current node* is ``idx[0..depth-1]`` with
     delegation marks flattened to the branch actually taken (DELEGATED means
-    the donor went left).  O(W · D_MAX) applies — paid once per restore.
+    the donor went left).  Replay starts from the root of the lane's OWN
+    instance.  O(W · D_MAX) applies — paid once per restore.
     """
     bits = jnp.where(lanes.idx < 0, jnp.int8(0), lanes.idx)
+    k = lanes.best.shape[0]
+    safe_inst = jnp.clip(lanes.inst, 0, k - 1)
     stacks = jax.vmap(
-        lambda b, d, s: replay_path(problem, b, d, s)
-    )(bits, lanes.depth, lanes.stack)
+        lambda b, d, s, i: replay_path(problem, b, d, s, i)
+    )(bits, lanes.depth, lanes.stack, safe_inst)
     keep = lanes.active
     stack = jax.tree_util.tree_map(
         lambda new, old: jnp.where(
@@ -164,15 +201,17 @@ def install_pending(problem: BinaryProblem, lanes: Lanes,
     idxs = np.asarray(lanes.idx).copy()
     depth = np.asarray(lanes.depth).copy()
     base = np.asarray(lanes.base).copy()
+    inst = np.asarray(lanes.inst).copy()
     act = active.copy()
     t_s = np.asarray(lanes.t_s).copy()
     for lane, task in zip(idle[:n], pool[:n]):
         w = min(il, task.idx.shape[0])
         idxs[lane, :w] = task.idx[:w]
         depth[lane], base[lane], act[lane] = task.depth, task.base, True
+        inst[lane] = task.inst
         t_s[lane] += 1
     lanes = lanes._replace(
         idx=jnp.asarray(idxs), depth=jnp.asarray(depth),
-        base=jnp.asarray(base), active=jnp.asarray(act),
-        t_s=jnp.asarray(t_s))
+        base=jnp.asarray(base), inst=jnp.asarray(inst),
+        active=jnp.asarray(act), t_s=jnp.asarray(t_s))
     return rebuild_stacks(problem, lanes), pool[n:]

@@ -69,77 +69,88 @@ def _axis_rank(axis_names: Sequence[str]) -> jnp.ndarray:
 
 def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
                        axis_names: Sequence[str], max_ship: int) -> Lanes:
-    """One cross-device steal phase (steps 1-4 above).
+    """One cross-device steal phase (steps 1-4 above), instance-scoped.
 
     ``max_ship`` bounds tasks shipped per device per round (static shape of
-    the all_gather payload).
+    the all_gather payload).  With K > 1 instances the entire protocol runs
+    PER INSTANCE: demand/supply summaries, greedy prefix quotas and the
+    rank-arithmetic claim are all keyed by ``inst``, so a thief only ever
+    claims a task of its own instance (the tenant-isolation invariant).
+    K = 1 reduces to the original single-pool protocol.
     """
     w, il = lanes.idx.shape
+    k = lanes.best.shape[0]
     ax = tuple(axis_names)
     me = _axis_rank(ax)
+    lane_ids = jnp.arange(w, dtype=jnp.int32)
+    safe_inst = jnp.clip(lanes.inst, 0, k - 1)
 
-    idle = (~lanes.active).astype(jnp.int32)
-    demand_local = jnp.sum(idle)
+    thieves = steal.thief_mask(lanes)
     slots = steal.donor_slots(lanes)
-    supply_local = jnp.sum((lanes.active & (slots < il)).astype(jnp.int32))
-    supply_local = jnp.minimum(supply_local, max_ship)
+    donors = steal.donor_mask(lanes, slots)
+    demand_local = jnp.zeros((k,), jnp.int32).at[safe_inst].add(
+        thieves.astype(jnp.int32))
+    donatable = jnp.zeros((k,), jnp.int32).at[safe_inst].add(
+        donors.astype(jnp.int32))
 
     # (1) advertise; all_gather along the flattened mesh axes.
-    summary = jnp.stack([demand_local, supply_local])
-    all_sum = jax.lax.all_gather(summary, ax, tiled=False)  # [D, 2]
-    all_sum = all_sum.reshape(-1, 2)
-    demands, supplies = all_sum[:, 0], all_sum[:, 1]
-    total_demand = jnp.sum(demands)
+    summary = jnp.stack([demand_local, donatable], axis=1)      # [K, 2]
+    all_sum = jax.lax.all_gather(summary, ax, tiled=False).reshape(-1, k, 2)
+    demands, supplies = all_sum[:, :, 0], all_sum[:, :, 1]      # [D, K]
+    total_demand = jnp.sum(demands, axis=0)                     # [K]
 
-    # (2) greedy prefix quota: devices donate in rank order until demand met.
-    presum = jnp.cumsum(supplies) - supplies
-    quota = jnp.clip(total_demand - jnp.minimum(presum, total_demand),
-                     0, supplies)
-    my_quota = quota[me]
+    # (2) greedy prefix quota per instance: devices donate in rank order
+    # until that instance's demand is met.
+    presum = jnp.cumsum(supplies, axis=0) - supplies            # [D, K]
+    quota = jnp.clip(total_demand[None, :]
+                     - jnp.minimum(presum, total_demand[None, :]),
+                     0, supplies)                               # [D, K]
+    # Cap each device's TOTAL at max_ship (static payload) with an
+    # instance-major prefix over the demand-limited quotas — capping the
+    # quotas (not the donatable counts) so a zero-demand instance's idle
+    # supply can never crowd higher-id tenants out of the budget.  Every
+    # device computes the same capped matrix, keeping the rank arithmetic
+    # below globally consistent.
+    qpre = jnp.cumsum(quota, axis=1) - quota                    # [D, K]
+    quota = jnp.clip(max_ship - jnp.minimum(qpre, max_ship), 0, quota)
+    my_quota = quota[me]                                        # [K]
 
-    # Don't ship to ourselves what we can solve locally: local thieves are
-    # served by the intra-device round that precedes this phase, so demand
-    # here is already net of local matches.
-    lanes, bits, tdepth, valid = steal.extract_tasks(
+    lanes, bits, tdepth, tinst, trank, valid = steal.extract_tasks(
         lanes, my_quota, max_tasks=max_ship)
 
-    # (3) ship the index vectors (tiny: max_ship × IDX_LEN int8).
+    # (3) ship the index vectors (tiny: max_ship × (IDX_LEN+4) int32).
+    # Each row carries its GLOBAL within-instance rank so claiming needs no
+    # further coordination.
+    task_offset = jnp.cumsum(quota, axis=0) - quota             # [D, K]
+    grank_task = task_offset[me, tinst] + trank
     payload = jnp.concatenate(
-        [bits.astype(jnp.int32), tdepth[:, None], valid[:, None].astype(jnp.int32)],
-        axis=1)                                            # [S, IL+2]
+        [bits.astype(jnp.int32), tdepth[:, None], tinst[:, None],
+         grank_task[:, None], valid[:, None].astype(jnp.int32)],
+        axis=1)                                                 # [S, IL+4]
     world = jax.lax.all_gather(payload, ax, tiled=False).reshape(
-        -1, max_ship, il + 2)                               # [D, S, IL+2]
+        -1, il + 4)                                             # [D*S, IL+4]
+    w_bits, w_depth = world[:, :il], world[:, il]
+    w_inst, w_grank = world[:, il + 1], world[:, il + 2]
+    w_valid = world[:, il + 3] > 0
 
-    # (4) claim by global rank arithmetic.  ``install_tasks`` hands row k to
-    # the k-th idle lane (its thief-rank contract), so rows here MUST be
-    # indexed by local thief rank, not by lane id — per-lane rows silently
-    # drop tasks whenever the idle lanes are not a prefix of the lane ids
-    # (the dropped task is already DELEGATED at its donor: a lost subtree).
-    task_counts = quota                                     # tasks from dev j
-    task_offset = jnp.cumsum(task_counts) - task_counts
-    thief_offset = (jnp.cumsum(demands) - demands)[me]
-    n_tasks_total = jnp.sum(task_counts)
+    # (4) claim by per-instance global rank arithmetic: the thief with
+    # within-instance global rank g claims the instance's g-th global task.
+    thief_offset = (jnp.cumsum(demands, axis=0) - demands)[me]  # [K]
+    my_trank = steal._rank_within_instance(thieves, lane_ids, lanes.inst)
+    my_grank = thief_offset[safe_inst] + my_trank
+    pair = (thieves[:, None] & w_valid[None, :]
+            & (w_inst[None, :] == safe_inst[:, None])
+            & (w_grank[None, :] == my_grank[:, None]))          # [W, D*S]
+    src = jnp.argmax(pair, axis=1)
+    claim = jnp.any(pair, axis=1)
 
-    # Flatten world tasks in (device, slot) order; the g-th valid global task
-    # lives at flat position: device j with task_offset[j] <= g <
-    # task_offset[j]+quota[j], slot g - task_offset[j].
-    rank = jnp.arange(w, dtype=jnp.int32)                   # local thief rank
-    grank = thief_offset + rank                             # global thief rank
-    claim = (rank < demand_local) & (grank < n_tasks_total)
-    g = jnp.clip(grank, 0, jnp.maximum(n_tasks_total - 1, 0))
-    src_dev = jnp.sum((task_offset[None, :] <= g[:, None]).astype(jnp.int32),
-                      axis=1) - 1
-    src_dev = jnp.clip(src_dev, 0, world.shape[0] - 1)
-    src_slot = jnp.clip(g - task_offset[src_dev], 0, max_ship - 1)
-
-    recv = world[src_dev, src_slot]                         # [W, IL+2]
-    rbits = jnp.where(claim[:, None], recv[:, :il].astype(jnp.int8),
+    rbits = jnp.where(claim[:, None], w_bits[src].astype(jnp.int8),
                       UNVISITED)
-    rdepth = jnp.where(claim, recv[:, il], 0)
-    rvalid = claim & (recv[:, il + 1] > 0)
+    rdepth = jnp.where(claim, w_depth[src], 0)
+    rinst = jnp.where(claim, w_inst[src], 0)
 
-    lanes = lanes._replace(t_r=lanes.t_r + (~lanes.active).astype(jnp.int32))
-    return steal.install_tasks(problem, lanes, rbits, rdepth, rvalid)
+    lanes = lanes._replace(t_r=lanes.t_r + thieves.astype(jnp.int32))
+    return steal.install_tasks(problem, lanes, rbits, rdepth, rinst, claim)
 
 
 def make_round(problem: BinaryProblem, steps_per_round: int,
@@ -157,13 +168,19 @@ def make_round(problem: BinaryProblem, steps_per_round: int,
         lanes = steal.balance_device(problem, lanes)
         if axis_names:
             lanes = cross_device_steal(problem, lanes, axis_names, max_ship)
-            # Paper's notification broadcast: share the incumbent value.
+            # Paper's notification broadcast: share the incumbent table.
             best = jax.lax.pmin(lanes.best, tuple(axis_names))
             lanes = lanes._replace(best=best)
-        # Termination metric: active lanes + donatable slots, globally.
+        # Termination metric PER INSTANCE: active lanes + donatable slots.
+        # The service driver retires instance i when open_work[i] == 0; the
+        # single-instance solve sums the vector.
+        k = lanes.best.shape[0]
+        safe_inst = jnp.clip(lanes.inst, 0, k - 1)
         slots = steal.donor_slots(lanes)
-        open_work = (jnp.sum(lanes.active.astype(jnp.int32))
-                     + jnp.sum((slots < lanes.idx.shape[1]).astype(jnp.int32)))
+        contrib = (lanes.active.astype(jnp.int32)
+                   + (lanes.active
+                      & (slots < lanes.idx.shape[1])).astype(jnp.int32))
+        open_work = jnp.zeros((k,), jnp.int32).at[safe_inst].add(contrib)
         if axis_names:
             open_work = jax.lax.psum(open_work, tuple(axis_names))
         return lanes, open_work
@@ -267,7 +284,7 @@ def solve(problem: BinaryProblem,
         lanes = feed_pool(lanes)
         lanes, open_work = boot_fn(lanes) if boot_fn else round_fn(lanes)
         rounds += 1
-        if int(open_work) == 0 and not pool:
+        if int(jnp.sum(open_work)) == 0 and not pool:
             done = True
             break
     while not done and rounds < max_rounds:
@@ -275,10 +292,10 @@ def solve(problem: BinaryProblem,
         lanes, open_work = round_fn(lanes)
         rounds += 1
         if on_round is not None:
-            on_round(rounds, lanes, int(open_work))
+            on_round(rounds, lanes, int(jnp.sum(open_work)))
         if checkpoint_every and checkpoint_path and rounds % checkpoint_every == 0:
             ckpt.save(checkpoint_path, _gather_lanes(lanes))
-        if int(open_work) == 0 and not pool:
+        if int(jnp.sum(open_work)) == 0 and not pool:
             done = True
 
     stats = SolveStats(
@@ -291,6 +308,9 @@ def solve(problem: BinaryProblem,
         lanes=int(lanes.active.shape[0]),
     )
     best_payload = jax.tree_util.tree_map(np.asarray, lanes.best_payload)
+    if problem.num_instances == 1:
+        # Single-instance API: drop the K=1 incumbent-table dim.
+        best_payload = jax.tree_util.tree_map(lambda p: p[0], best_payload)
     return best_payload, stats, lanes
 
 

@@ -33,21 +33,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import (DELEGATED, LEFT, RIGHT, UNVISITED, INF_VALUE,
-                            BinaryProblem, tree_select)
+                            BinaryProblem, root_of, tree_select)
 
 PyTree = Any
 
+#: ``Lanes.inst`` value for a lane not (yet) bound to any instance.  Such a
+#: lane never steals and never donates; the service driver retargets it.
+NO_INSTANCE = -1
+
 
 class Lanes(NamedTuple):
-    """State of W lanes on one device.  All leading dims are W unless noted."""
+    """State of W lanes on one device.  All leading dims are W unless noted.
+
+    ``K = problem.num_instances`` instances are multiplexed over the lane
+    pool: each lane serves exactly one instance (``inst``), the incumbent is
+    a per-instance table, and stealing never crosses instances.  Ordinary
+    single-instance problems have K = 1 and ``inst`` identically 0, which
+    reduces every mechanism below to the paper's original semantics.
+    """
 
     idx: jnp.ndarray          # int8  [W, IDX_LEN]
     depth: jnp.ndarray        # int32 [W]
     base: jnp.ndarray         # int32 [W]
+    inst: jnp.ndarray         # int32 [W]   — instance the lane serves (or
+                              #               NO_INSTANCE for unbound lanes)
     active: jnp.ndarray       # bool  [W]
     stack: PyTree             # leaves [W, STACK_LEN, ...]
-    best: jnp.ndarray         # int32 []     — device-wide incumbent value
-    best_payload: PyTree      # leaves [...] — incumbent solution (no W dim)
+    best: jnp.ndarray         # int32 [K]      — per-instance incumbent value
+    best_payload: PyTree      # leaves [K, ...] — per-instance incumbent solution
     nodes: jnp.ndarray        # int32 [W]    — search-nodes visited
     t_s: jnp.ndarray          # int32 [W]    — tasks received (paper's T_S)
     t_r: jnp.ndarray          # int32 [W]    — task requests made (paper's T_R)
@@ -72,7 +85,8 @@ def init_lanes(problem: BinaryProblem, num_lanes: int,
     lanes start idle and are fed by the first steal rounds (bootstrap).
     """
     w, il, sl = num_lanes, idx_len(problem), stack_len(problem)
-    root = problem.root()
+    k = problem.num_instances
+    root = root_of(problem, jnp.int32(0))
 
     def alloc(leaf):
         buf = jnp.zeros((w, sl) + leaf.shape, leaf.dtype)
@@ -88,10 +102,13 @@ def init_lanes(problem: BinaryProblem, num_lanes: int,
         idx=jnp.full((w, il), UNVISITED, jnp.int8),
         depth=jnp.zeros((w,), jnp.int32),
         base=jnp.zeros((w,), jnp.int32),
+        inst=jnp.zeros((w,), jnp.int32),
         active=active,
         stack=stack,
-        best=INF_VALUE,
-        best_payload=problem.payload_zero(),
+        best=jnp.full((k,), INF_VALUE, jnp.int32),
+        best_payload=jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (k,) + l.shape),
+            problem.payload_zero()),
         nodes=jnp.zeros((w,), jnp.int32),
         t_s=jnp.zeros((w,), jnp.int32).at[0].set(1 if seed_root else 0),
         t_r=jnp.zeros((w,), jnp.int32),
@@ -159,20 +176,34 @@ def make_step(problem: BinaryProblem):
     """Build the vectorized one-step transition Lanes -> Lanes."""
 
     step_v = jax.vmap(functools.partial(_step_lane, problem),
-                      in_axes=(0, 0, 0, 0, 0, None))
+                      in_axes=(0, 0, 0, 0, 0, 0))
 
     def step(lanes: Lanes) -> Lanes:
+        w = lanes.active.shape[0]
+        k = lanes.best.shape[0]
+        safe_inst = jnp.clip(lanes.inst, 0, k - 1)
+        # Each lane prunes against ITS instance's incumbent.
+        best_per_lane = lanes.best[safe_inst]
         (idx, depth, active, stack, visited, improved, vals,
          payloads) = step_v(lanes.idx, lanes.depth, lanes.base, lanes.active,
-                            lanes.stack, lanes.best)
-        # Incumbent election across lanes (the paper's broadcast, free here).
-        best_lane = jnp.argmin(vals)
-        lane_best = vals[best_lane]
-        any_improved = lane_best < lanes.best
-        new_best = jnp.minimum(lanes.best, lane_best)
-        new_payload = jax.tree_util.tree_map(
-            lambda p, old: jnp.where(any_improved, p[best_lane], old),
-            payloads, lanes.best_payload)
+                            lanes.stack, best_per_lane)
+        # Incumbent election per instance (the paper's broadcast, free
+        # here): segment-min of the improved values over ``inst``, then the
+        # lowest-id winning lane supplies the payload for its instance.
+        seg = jnp.full((k,), INF_VALUE, jnp.int32).at[safe_inst].min(vals)
+        any_improved = seg < lanes.best
+        new_best = jnp.minimum(lanes.best, seg)
+        lane_ids = jnp.arange(w, dtype=jnp.int32)
+        winner = jnp.full((k,), w, jnp.int32).at[safe_inst].min(
+            jnp.where(improved & (vals == seg[safe_inst]), lane_ids, w))
+        safe_winner = jnp.clip(winner, 0, w - 1)
+
+        def elect(p, old):
+            upd = any_improved.reshape((k,) + (1,) * (old.ndim - 1))
+            return jnp.where(upd, p[safe_winner], old)
+
+        new_payload = jax.tree_util.tree_map(elect, payloads,
+                                             lanes.best_payload)
         return lanes._replace(
             idx=idx, depth=depth, active=active, stack=stack,
             best=new_best, best_payload=new_payload,
@@ -207,18 +238,20 @@ def make_expand(problem: BinaryProblem, num_steps: int):
 
 
 def replay_path(problem: BinaryProblem, bits: jnp.ndarray,
-                path_depth: jnp.ndarray, stack: PyTree) -> PyTree:
+                path_depth: jnp.ndarray, stack: PyTree,
+                inst: jnp.ndarray = jnp.int32(0)) -> PyTree:
     """CONVERTINDEX: rebuild the state stack for a task index (paper §IV-A).
 
-    Starting from the root, re-applies the branch decisions ``bits[0..path_
-    depth-1]`` (delegation marks already flattened to LEFT by FIXINDEX).
-    Fills ``stack[j]`` for j = 0..path_depth and returns the new stack.  The
-    cost is O(D_MAX) child derivations (``Problem.apply``, i.e. ``evaluate``
-    with the non-child outputs dead-code-eliminated) — the paper's
-    serial-overhead term, incurred once per received task.
+    Starting from the root of instance ``inst`` (plain ``root()`` for
+    single-instance problems), re-applies the branch decisions ``bits[0..
+    path_depth-1]`` (delegation marks already flattened to LEFT by
+    FIXINDEX).  Fills ``stack[j]`` for j = 0..path_depth and returns the new
+    stack.  The cost is O(D_MAX) child derivations (``Problem.apply``, i.e.
+    ``evaluate`` with the non-child outputs dead-code-eliminated) — the
+    paper's serial-overhead term, incurred once per received task.
     """
     il = bits.shape[0]
-    root = problem.root()
+    root = root_of(problem, inst)
     stack = jax.tree_util.tree_map(
         lambda s, r: jax.lax.dynamic_update_index_in_dim(s, r, 0, axis=0),
         stack, root)

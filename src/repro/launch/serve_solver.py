@@ -1,0 +1,106 @@
+"""Multi-tenant solver service launcher: many instances, one lane pool.
+
+  PYTHONPATH=src python -m repro.launch.serve_solver \
+      --instances vc:gnp:20:30:5,ds:gnp:16:30:7,vc:reg:24:4:1 \
+      --lanes 32 --slots 4 [--ckpt svc.ckpt] [--resume]
+
+Each instance spec is ``<family>:<instance>`` where ``<family>`` is
+``vc`` | ``ds`` and ``<instance>`` follows ``repro.launch.solve`` syntax
+(``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``, ``cell60``).
+``--repeat R`` replays the whole mix R times (distinct request ids) to
+exercise continuous batching past the slot count.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.launch.solve import parse_instance
+from repro.service import SolveRequest, SolverService
+
+
+def parse_workload(spec: str, repeat: int):
+    """-> list of (family, Graph) over the comma-separated instance mix."""
+    out = []
+    for _ in range(repeat):
+        for item in spec.split(","):
+            family, _, inst = item.partition(":")
+            if family not in ("vc", "ds") or not inst:
+                raise SystemExit(
+                    f"bad instance spec {item!r}: want <vc|ds>:<instance>")
+            out.append((family, parse_instance(inst)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--instances",
+                    default="vc:gnp:20:30:5,ds:gnp:16:30:7,vc:reg:24:4:1,"
+                            "ds:gnp:14:25:2")
+    ap.add_argument("--repeat", type=int, default=1)
+    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--steps-per-round", type=int, default=64)
+    ap.add_argument("--ckpt", default=None,
+                    help="service checkpoint path (written every "
+                         "--ckpt-every rounds and after the drain)")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="rounds between mid-run checkpoints (0 = final only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the service from --ckpt before serving")
+    args = ap.parse_args()
+
+    if args.resume and not args.ckpt:
+        ap.error("--resume requires --ckpt")
+
+    workload = parse_workload(args.instances, args.repeat)
+    if args.resume:
+        svc = SolverService.restore(args.ckpt, num_lanes=args.lanes,
+                                    steps_per_round=args.steps_per_round)
+        print(f"restored service: slots={svc.slot_rid} "
+              f"pool={len(svc.pool)} rounds={svc.rounds}")
+        # In-flight slots finish under their checkpointed rids; the
+        # --instances workload is submitted as NEW requests with rids past
+        # everything the checkpoint knows about (the checkpoint does not
+        # record drained queues, so resubmission is the caller's job).
+        rid0 = 1 + max([r for r in svc.slot_rid if r >= 0] + [-1])
+        reqs = [SolveRequest(rid=rid0 + i, graph=g, family=fam)
+                for i, (fam, g) in enumerate(workload)]
+    else:
+        max_n = max(g.n for _, g in workload)
+        svc = SolverService(max_n=max_n, slots=args.slots,
+                            num_lanes=args.lanes,
+                            steps_per_round=args.steps_per_round)
+        reqs = [SolveRequest(rid=i, graph=g, family=fam)
+                for i, (fam, g) in enumerate(workload)]
+    for r in reqs:
+        svc.submit(r)
+
+    print(f"serving {len(reqs)} requests over {args.lanes} lanes / "
+          f"{svc.spec.k} slots (padded n={svc.spec.n})")
+    t0 = time.time()
+    while svc._has_work():
+        svc.step_round()
+        if (args.ckpt and args.ckpt_every
+                and svc.rounds % args.ckpt_every == 0):
+            svc.save(args.ckpt)
+    wall = time.time() - t0
+    by_rid = {q.rid: q for q in reqs}
+    for rid in sorted(svc.results):
+        r = svc.results[rid]
+        req = by_rid.get(rid)
+        label = (f"{req.family}[{req.graph.name}]" if req is not None
+                 else "(restored in-flight)")
+        print(f"  rid={r.rid:3d} {label} optimum={r.optimum} rounds="
+              f"{r.admitted_round}..{r.retired_round}")
+    done = len(svc.results)
+    print(f"drained {done} requests in {svc.rounds} rounds, "
+          f"{wall:.2f}s -> {done / max(wall, 1e-9):.2f} instances/s")
+    if args.ckpt:
+        svc.save(args.ckpt)
+        print(f"service checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

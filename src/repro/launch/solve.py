@@ -43,6 +43,12 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
+    if args.problem != "vc" and args.backend != "jnp":
+        ap.error(
+            f"--backend {args.backend} is only implemented for --problem vc "
+            f"(dominating set has no Pallas node-evaluation kernel; it was "
+            f"previously ignored silently — rerun with --backend jnp)")
+
     g = parse_instance(args.instance)
     prob = (make_vertex_cover(g, backend=args.backend)
             if args.problem == "vc" else make_dominating_set(g))

@@ -1,0 +1,17 @@
+"""Multi-tenant solver service: continuous batching of many instances.
+
+``batch_problem`` stacks K padded instances (vertex cover and/or dominating
+set) into one ``BinaryProblem`` whose per-lane state carries an instance
+id; ``driver`` streams solve requests through a fixed pool of W lanes with
+admission, instance-scoped stealing, per-instance retirement and elastic
+checkpointing.
+"""
+
+from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC, StackedSpec,
+                                         StackedTables, SvcState)
+from repro.service.driver import SolveRequest, SolverService
+
+__all__ = [
+    "FAMILY_DS", "FAMILY_VC", "StackedSpec", "StackedTables", "SvcState",
+    "SolveRequest", "SolverService",
+]

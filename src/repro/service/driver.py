@@ -1,0 +1,343 @@
+"""Continuous-batching solver service over one lane pool.
+
+The serving pattern of ``repro.serve.driver`` (fixed slot pool, lockstep
+ticks, admission/retirement at tick boundaries) applied to backtracking:
+
+  * the *pool* is W engine lanes advancing in lockstep under one jitted
+    round (expand → instance-scoped steal → per-instance termination);
+  * a *slot* is one of K stacked-instance table entries
+    (``batch_problem.StackedSpec``); a request occupies a slot from
+    admission to retirement;
+  * *admission* writes the padded instance into the stacked tables (they
+    are jit ARGUMENTS, so no recompilation), resets the slot's incumbent
+    and seeds the instance root onto one idle lane — every other lane the
+    instance ever uses arrives via stealing, the same bootstrap the paper
+    uses for its virtual topology;
+  * *retirement* fires when the per-instance open-work counter reaches
+    zero: the slot's optimum + payload are recorded and the slot is free
+    for the next queued request.
+
+Tenant isolation: stealing (intra- and cross-device) never pairs lanes
+across instances, and per-instance incumbents mean one tenant's bound
+never prunes another's tree — a slot's result is bitwise identical to a
+dedicated single-instance solve (asserted against the serial oracle by
+``tests/test_service.py``).
+
+Elastic operation: ``save``/``restore`` persist the whole service (lane
+control state + slot tables + queue-of-record metadata) through
+``repro.core.checkpoint``; restoring onto W' ≠ W lanes parks surplus tasks
+in an instance-tagged pending pool that drains at round boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import checkpoint as ckpt
+from repro.core.api import INF_VALUE, UNVISITED
+from repro.core.distributed import make_round
+from repro.core.engine import NO_INSTANCE, init_lanes
+from repro.problems.graphs import Graph
+from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC, StackedSpec,
+                                         StackedTables, pack_instance)
+
+_FAMILY_NAMES = {"vc": FAMILY_VC, "ds": FAMILY_DS}
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One tenant's instance.  ``family`` is "vc" | "ds"."""
+
+    rid: int
+    graph: Graph
+    family: str
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    optimum: int
+    payload: np.ndarray        # uint32[w] solution bitset (padded width)
+    admitted_round: int
+    retired_round: int
+
+
+class SolverService:
+    """Fixed pool of W lanes continuously batched over streamed requests."""
+
+    def __init__(self, *, max_n: int, slots: int, num_lanes: int,
+                 steps_per_round: int = 64):
+        self.spec = StackedSpec(n=max_n, k=slots)
+        self.num_lanes = num_lanes
+        self.steps_per_round = steps_per_round
+        self.tables = self.spec.empty_tables()           # host numpy
+        self._tables_dev: Optional[StackedTables] = None
+
+        spec = self.spec
+
+        def _round(lanes, tables):
+            return make_round(spec.bind(tables), steps_per_round)(lanes)
+
+        def _rebuild(lanes, tables):
+            return ckpt.rebuild_stacks(spec.bind(tables), lanes)
+
+        self._round = jax.jit(_round)
+        self._rebuild = jax.jit(_rebuild)
+
+        proto = spec.bind(self._tables_jnp())
+        lanes = init_lanes(proto, num_lanes, seed_root=False)
+        self.lanes = lanes._replace(
+            inst=jnp.full((num_lanes,), NO_INSTANCE, jnp.int32))
+
+        self.queue: Deque[SolveRequest] = deque()
+        self.slot_rid: List[int] = [-1] * slots          # -1 = free slot
+        self.slot_admitted: List[int] = [0] * slots
+        self.results: Dict[int, RequestResult] = {}
+        self.pool: List[ckpt.PendingTask] = []
+        self.rounds = 0
+
+    # -- host/device plumbing ----------------------------------------------
+
+    def _tables_jnp(self) -> StackedTables:
+        if self._tables_dev is None:
+            self._tables_dev = StackedTables(
+                *(jnp.asarray(t) for t in self.tables))
+        return self._tables_dev
+
+    def _touch_tables(self) -> None:
+        self._tables_dev = None
+
+    # -- admission / lane placement ----------------------------------------
+
+    def submit(self, request: SolveRequest) -> int:
+        if request.family not in _FAMILY_NAMES:
+            raise ValueError(f"unknown family {request.family!r}")
+        if request.graph.n > self.spec.n:
+            raise ValueError(
+                f"request n={request.graph.n} exceeds service max_n="
+                f"{self.spec.n}")
+        self.queue.append(request)
+        return request.rid
+
+    def _host_lane_fields(self):
+        l = self.lanes
+        return {
+            "idx": np.asarray(l.idx).copy(),
+            "depth": np.asarray(l.depth).copy(),
+            "base": np.asarray(l.base).copy(),
+            "inst": np.asarray(l.inst).copy(),
+            "active": np.asarray(l.active).copy(),
+            "t_s": np.asarray(l.t_s).copy(),
+            "best": np.asarray(l.best).copy(),
+        }
+
+    def _admit_and_place(self) -> bool:
+        """Admit queued requests into free slots and (re)target idle lanes.
+
+        Returns True when lane control state changed (stacks need replay).
+        """
+        # Steady-state fast path: nothing to drain/admit and every idle
+        # lane already points at its round-robin live slot — skip the full
+        # host round-trip (only ``active``/``inst`` are needed to decide).
+        if not self.pool and not (self.queue
+                                  and any(r < 0 for r in self.slot_rid)):
+            active = np.asarray(self.lanes.active)
+            inst = np.asarray(self.lanes.inst)
+            idle = np.flatnonzero(~active)
+            live = [s for s in range(self.spec.k) if self.slot_rid[s] >= 0]
+            wants = [live[j % len(live)] if live else NO_INSTANCE
+                     for j in range(len(idle))]
+            if all(inst[lane] == want for lane, want in zip(idle, wants)):
+                return False
+
+        h = self._host_lane_fields()
+        idle = [i for i in range(self.num_lanes) if not h["active"][i]]
+        changed = False
+
+        # Pending-pool drain first: restored tasks have priority over fresh
+        # roots for idle lanes (they are already-owned subtrees).
+        while self.pool and idle:
+            task = self.pool.pop(0)
+            lane = idle.pop(0)
+            il = h["idx"].shape[1]
+            width = min(il, task.idx.shape[0])
+            h["idx"][lane, :] = int(UNVISITED)
+            h["idx"][lane, :width] = task.idx[:width]
+            h["depth"][lane], h["base"][lane] = task.depth, task.base
+            h["inst"][lane], h["active"][lane] = task.inst, True
+            h["t_s"][lane] += 1
+            changed = True
+
+        # Admission: one free slot + one idle lane per queued request.
+        free = [s for s in range(self.spec.k) if self.slot_rid[s] < 0]
+        payload_host = None
+        while self.queue and free and idle:
+            req = self.queue.popleft()
+            slot = free.pop(0)
+            lane = idle.pop(0)
+            adj, fm, fam = pack_instance(
+                req.graph, _FAMILY_NAMES[req.family], self.spec.n)
+            self.tables.adj[slot] = adj
+            self.tables.fullm[slot] = fm
+            self.tables.family[slot] = fam
+            self._touch_tables()
+            self.slot_rid[slot] = req.rid
+            self.slot_admitted[slot] = self.rounds
+            # Reset the slot incumbent, seed the root on the chosen lane.
+            h["best"][slot] = int(INF_VALUE)
+            if payload_host is None:
+                payload_host = jax.tree_util.tree_map(
+                    lambda p: np.asarray(p).copy(), self.lanes.best_payload)
+            payload_host = jax.tree_util.tree_map(
+                lambda p: _zero_row(p, slot), payload_host)
+            h["idx"][lane, :] = int(UNVISITED)
+            h["depth"][lane] = h["base"][lane] = 0
+            h["inst"][lane], h["active"][lane] = slot, True
+            h["t_s"][lane] += 1
+            changed = True
+
+        # Retarget remaining idle lanes round-robin over live slots so the
+        # next steal round can feed them (instance-scoped thieves).
+        live = [s for s in range(self.spec.k) if self.slot_rid[s] >= 0]
+        retargeted = False
+        for j, lane in enumerate(idle):
+            want = live[j % len(live)] if live else NO_INSTANCE
+            if h["inst"][lane] != want:
+                h["inst"][lane] = want   # no stack impact: lane stays idle
+                retargeted = True
+
+        if not changed and not retargeted:
+            return False                 # steady state: no host->device copy
+        self.lanes = self.lanes._replace(
+            idx=jnp.asarray(h["idx"]), depth=jnp.asarray(h["depth"]),
+            base=jnp.asarray(h["base"]), inst=jnp.asarray(h["inst"]),
+            active=jnp.asarray(h["active"]), t_s=jnp.asarray(h["t_s"]),
+            best=jnp.asarray(h["best"]),
+            best_payload=(self.lanes.best_payload if payload_host is None
+                          else jax.tree_util.tree_map(jnp.asarray,
+                                                      payload_host)))
+        if changed:
+            # CONVERTINDEX replay rebuilds the stacks of seeded/installed
+            # lanes (replaying untouched active lanes is a no-op by the
+            # determinism contract).
+            self.lanes = self._rebuild(self.lanes, self._tables_jnp())
+        return changed
+
+    # -- retirement ---------------------------------------------------------
+
+    def _retire(self, open_vec: np.ndarray) -> None:
+        h_inst = None
+        for slot in range(self.spec.k):
+            rid = self.slot_rid[slot]
+            if rid < 0 or open_vec[slot] != 0:
+                continue
+            if any(t.inst == slot for t in self.pool):
+                continue                      # restored work still pending
+            payload = jax.tree_util.tree_map(
+                lambda p: np.asarray(p[slot]), self.lanes.best_payload)
+            self.results[rid] = RequestResult(
+                rid=rid,
+                optimum=int(np.asarray(self.lanes.best)[slot]),
+                payload=payload,
+                admitted_round=self.slot_admitted[slot],
+                retired_round=self.rounds)
+            self.slot_rid[slot] = -1
+            # Unbind the retired slot's (now idle) lanes.
+            if h_inst is None:
+                h_inst = np.asarray(self.lanes.inst).copy()
+            h_inst[h_inst == slot] = NO_INSTANCE
+        if h_inst is not None:
+            self.lanes = self.lanes._replace(inst=jnp.asarray(h_inst))
+
+    # -- the service loop ---------------------------------------------------
+
+    def _has_work(self) -> bool:
+        return (bool(self.queue) or bool(self.pool)
+                or any(r >= 0 for r in self.slot_rid))
+
+    def step_round(self) -> np.ndarray:
+        """One service cycle: admit → round → retire.  Returns open-work."""
+        self._admit_and_place()
+        lanes, open_vec = self._round(self.lanes, self._tables_jnp())
+        self.lanes = lanes
+        self.rounds += 1
+        open_np = np.asarray(open_vec)
+        self._retire(open_np)
+        return open_np
+
+    def run(self, requests: Optional[List[SolveRequest]] = None,
+            max_rounds: int = 100000) -> Dict[int, RequestResult]:
+        """Drain: admit ``requests`` plus anything queued, solve them all."""
+        for r in requests or []:
+            self.submit(r)
+        start = self.rounds
+        while self._has_work():
+            if self.rounds - start >= max_rounds:
+                raise RuntimeError(
+                    f"service did not drain in {max_rounds} rounds; "
+                    f"slots={self.slot_rid} queue={len(self.queue)}")
+            self.step_round()
+        return self.results
+
+    # -- elastic checkpoint -------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Persist lanes + slot tables + pending pool in one atomic file."""
+        pool_n = len(self.pool)
+        il = self.lanes.idx.shape[1]
+        pool_idx = np.full((pool_n, il), int(UNVISITED), np.int8)
+        pool_meta = np.zeros((pool_n, 3), np.int32)     # depth, base, inst
+        for i, t in enumerate(self.pool):
+            width = min(il, t.idx.shape[0])
+            pool_idx[i, :width] = t.idx[:width]
+            pool_meta[i] = (t.depth, t.base, t.inst)
+        extra = {
+            "adj": self.tables.adj, "fullm": self.tables.fullm,
+            "family": self.tables.family,
+            "slot_rid": np.asarray(self.slot_rid, np.int32),
+            "slot_admitted": np.asarray(self.slot_admitted, np.int32),
+            "spec": np.asarray([self.spec.n, self.spec.k], np.int32),
+            "rounds": np.asarray(self.rounds, np.int32),
+            "pool_idx": pool_idx, "pool_meta": pool_meta,
+        }
+        ckpt.save(path, self.lanes, extra=extra)
+
+    @classmethod
+    def restore(cls, path: str, *, num_lanes: int,
+                steps_per_round: int = 64) -> "SolverService":
+        """Rebuild the service onto ``num_lanes`` lanes (elastic W' ≠ W).
+
+        Surplus in-flight tasks wait in the pending pool and are installed
+        as lanes free up; unstarted queued requests are NOT persisted —
+        resubmit them.  Results for slots still in flight are produced
+        under the same rids recorded at save time.
+        """
+        extra = ckpt.read_extra(path)
+        n, k = (int(x) for x in extra["spec"])
+        svc = cls(max_n=n, slots=k, num_lanes=num_lanes,
+                  steps_per_round=steps_per_round)
+        svc.tables = StackedTables(
+            adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
+            family=extra["family"].copy())
+        svc._touch_tables()
+        problem = svc.spec.bind(svc._tables_jnp())
+        svc.lanes, svc.pool = ckpt.restore(path, problem, num_lanes)
+        for i in range(extra["pool_idx"].shape[0]):
+            d, b, inst = (int(x) for x in extra["pool_meta"][i])
+            svc.pool.append(ckpt.PendingTask(extra["pool_idx"][i].copy(),
+                                             d, b, inst))
+        svc.slot_rid = [int(r) for r in extra["slot_rid"]]
+        svc.slot_admitted = [int(r) for r in extra["slot_admitted"]]
+        svc.rounds = int(extra["rounds"])
+        return svc
+
+
+def _zero_row(arr: np.ndarray, row: int) -> np.ndarray:
+    arr[row] = np.zeros_like(arr[row])
+    return arr

@@ -19,6 +19,8 @@ from repro.train.optim import adamw_init, adamw_update
 ARCHS = configs.ARCH_IDS
 
 
+
+pytestmark = pytest.mark.slow      # LM-architecture smoke matrix: full CI on main only
 def make_batch(cfg, b, s, key):
     k1, k2, k3 = jax.random.split(key, 3)
     if cfg.n_codebooks:

@@ -12,6 +12,8 @@ import sys
 
 import pytest
 
+
+pytestmark = pytest.mark.slow      # 8-device subprocess mesh solve: full CI on main only
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -97,6 +97,7 @@ print("ELASTIC_OK")
 """
 
 
+@pytest.mark.slow
 def test_elastic_train_restore_across_meshes():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -107,6 +108,7 @@ def test_elastic_train_restore_across_meshes():
     assert "ELASTIC_OK" in proc.stdout
 
 
+@pytest.mark.slow
 def test_batched_server_matches_reference():
     from repro import configs
     from repro.models import model as M

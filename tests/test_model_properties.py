@@ -21,6 +21,8 @@ from repro.models.ssm import causal_conv, causal_conv_step, ssd_chunked
 # Causality: output at position t must not depend on inputs after t.
 # ---------------------------------------------------------------------------
 
+
+pytestmark = pytest.mark.slow      # LM-substrate property tests: full CI on main only
 def test_blocked_attention_is_causal():
     key = jax.random.PRNGKey(0)
     b, s, h, g, hd = 1, 64, 4, 2, 16

@@ -28,11 +28,13 @@ def test_quickstart_example():
     assert "optimum matches the serial oracle" in out
 
 
+@pytest.mark.slow
 def test_guided_decode_example():
     out = run_script(["examples/guided_decode.py"])
     assert "same optimum" in out
 
 
+@pytest.mark.slow
 def test_train_lm_example_short():
     out = run_script(["examples/train_lm.py", "--steps", "40",
                       "--batch", "4", "--seq", "128"])
@@ -47,6 +49,28 @@ def test_solver_cli_with_checkpoint(tmp_path):
     assert "optimum=" in out
 
 
+def test_solver_cli_ds_pallas_fails_fast():
+    """--backend pallas with --problem ds used to be silently ignored (ds
+    only has the jnp path); it must now be a clear argparse error."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.solve", "--problem", "ds",
+         "--backend", "pallas", "--instance", "gnp:10:30:1"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "only implemented for --problem vc" in proc.stderr
+
+
+def test_serve_solver_cli_smoke():
+    out = run_script(["-m", "repro.launch.serve_solver",
+                      "--instances", "vc:gnp:12:30:5,ds:gnp:10:30:7",
+                      "--lanes", "8", "--slots", "2",
+                      "--steps-per-round", "16"])
+    assert "drained 2 requests" in out
+
+
+@pytest.mark.slow
 def test_serve_cli_smoke():
     out = run_script(["-m", "repro.launch.serve", "--arch", "qwen2-7b",
                       "--smoke", "--batch", "2", "--prompt-len", "16",
@@ -54,6 +78,7 @@ def test_serve_cli_smoke():
     assert "decoded 4 tokens" in out
 
 
+@pytest.mark.slow
 def test_kv_quant_matches_bf16_decode():
     """int8 KV cache must produce near-identical decode logits on the
     smoke model (quantization noise small vs logit scale)."""

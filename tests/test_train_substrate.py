@@ -22,6 +22,8 @@ from repro.train.optim import adamw_init, adamw_update, cosine_lr
 from repro.train.step import make_train_step, master_params
 
 
+
+pytestmark = pytest.mark.slow      # LM training-substrate tests: full CI on main only
 def test_data_pipeline_determinism():
     cfg = configs.smoke("qwen2-7b")
     b1 = synthetic_batch(cfg, 4, 32, seed=7, step=jnp.int32(13))
