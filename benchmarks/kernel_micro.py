@@ -6,12 +6,13 @@ shapes each kernel is exercised at, (b) ref-vs-kernel max abs error, and
 (c) the ref path's CPU throughput as a regression canary.
 
 ``run_node_eval`` additionally measures the solver's actual unit of work
-— fused ``Problem.evaluate`` nodes/sec, batched over lanes — for the
-legacy three-callback adapter, the fused jnp form and the fused+Pallas
-form, and records the trajectory in ``BENCH_node_eval.json`` at the repo
-root (DESIGN.md §3).  On CPU the Pallas variant runs the kernel body in
-interpret mode, so its absolute number is a correctness canary, not a
-speed claim.
+— fused ``Problem.evaluate`` nodes/sec, batched over lanes — for BOTH
+kernel-layer problem families (DESIGN.md §5.4): vertex cover (legacy
+three-callback adapter vs fused jnp vs fused+Pallas) and dominating set
+(fused jnp vs fused+Pallas), and records the trajectory in
+``BENCH_node_eval.json`` at the repo root (DESIGN.md §3/§5).  On CPU the
+Pallas variants run the kernel bodies in interpret mode, so their
+absolute numbers are correctness canaries, not speed claims.
 """
 
 from __future__ import annotations
@@ -25,10 +26,11 @@ import numpy as np
 
 from benchmarks.common import timed, write_csv
 from repro.core.api import INF_VALUE
-from repro.kernels import ref
+from repro.kernels import bitset_ops, ref
 from repro.kernels.bitset_degree import degree_argmax
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
+from repro.problems.dominating_set import DSState, make_dominating_set
 from repro.problems.graphs import gnp_graph, full_mask
 from repro.problems.vertex_cover import (VCState, make_vertex_cover,
                                          make_vertex_cover_callbacks)
@@ -91,6 +93,31 @@ def run(quick: bool = False) -> list:
                      "shape": f"n{n}_L{lanes}",
                      "ref_ms": round(t * 1e3, 2),
                      "max_abs_err": str(err)})
+
+    # stacked bitset stats (the service's batched kernel, DESIGN.md §5.3)
+    for (k, n, lanes) in [(4, 128, 16)] + ([] if quick else [(8, 256, 64)]):
+        key2 = jax.random.PRNGKey(k)
+        w = (n + 31) // 32
+        kt, km, kv, ki = jax.random.split(key2, 4)
+
+        def bits(kk, shape):
+            return jax.random.randint(kk, shape, 0, jnp.iinfo(jnp.int32).max,
+                                      jnp.int32).astype(jnp.uint32)
+
+        tables = bits(kt, (k, n, w))
+        mask = bits(km, (lanes, w))
+        valid = bits(kv, (lanes, w))
+        inst = jax.random.randint(ki, (lanes,), 0, k, jnp.int32)
+        fn = jax.jit(lambda t_, i, m, v: ref.stacked_count_stats_ref(
+            t_, i, m, v))
+        t, out_ref = timed(lambda: np.asarray(fn(tables, inst, mask, valid)))
+        out_pl = bitset_ops.stacked_count_stats(tables, inst, mask, valid,
+                                                interpret=True)
+        err = int(jnp.max(jnp.abs(out_pl - out_ref)))
+        rows.append({"kernel": "bitset_stacked",
+                     "shape": f"k{k}_n{n}_L{lanes}",
+                     "ref_ms": round(t * 1e3, 2),
+                     "max_abs_err": str(err)})
     return rows
 
 
@@ -113,26 +140,64 @@ def _lane_states(graph, lanes: int) -> VCState:
                        (~masks) & full[None, :]).sum(axis=1).astype(np.int32)))
 
 
-def run_node_eval(quick: bool = False) -> dict:
-    """Legacy vs fused vs fused+Pallas node-evaluation throughput."""
-    n, p, lanes = (60, 0.15, 16) if quick else (128, 0.1, 64)
-    g = gnp_graph(n, p, seed=7)
-    states = _lane_states(g, lanes)
-    variants = [
-        ("legacy_callbacks", make_vertex_cover_callbacks(g)),
-        ("fused_jnp", make_vertex_cover(g)),
-        ("fused_pallas", make_vertex_cover(g, backend="pallas")),
-    ]
-    out = {"instance": f"gnp:{n}:{int(p * 100)}:7", "lanes": lanes,
-           "unit": "node evaluations / second (CPU; pallas = interpret)",
-           "variants": {}}
+def _ds_lane_states(graph, lanes: int) -> DSState:
+    """Batch of distinct mid-search dominating-set states (varied dominated
+    and candidate masks) mirroring ``_lane_states``."""
+    key = jax.random.PRNGKey(1)
+    w = graph.words
+    kd, kc = jax.random.split(key)
+    dom = np.asarray(jax.random.bernoulli(kd, 0.3, (lanes, graph.n)))
+    cnd = np.asarray(jax.random.bernoulli(kc, 0.7, (lanes, graph.n)))
+    dominated = np.zeros((lanes, w), np.uint32)
+    cand = np.zeros((lanes, w), np.uint32)
+    for l in range(lanes):
+        for v in range(graph.n):
+            if dom[l, v]:
+                dominated[l, v // 32] |= np.uint32(1) << np.uint32(v % 32)
+            if cnd[l, v]:
+                cand[l, v // 32] |= np.uint32(1) << np.uint32(v % 32)
+    full = np.asarray(full_mask(graph.n))
+    chosen = (~cand) & full[None, :]
+    return DSState(dominated=jnp.asarray(dominated), cand=jnp.asarray(cand),
+                   chosen=jnp.asarray(chosen),
+                   size=jnp.asarray(np.bitwise_count(chosen).sum(
+                       axis=1).astype(np.int32)))
+
+
+def _time_variants(variants, states, lanes):
+    out = {}
     for name, prob in variants:
         fn = jax.jit(jax.vmap(lambda s: prob.evaluate(s, INF_VALUE)))
         t, _ = timed(lambda: jax.block_until_ready(fn(states)))
-        out["variants"][name] = {
+        out[name] = {
             "sec_per_batch": round(t, 6),
             "nodes_per_sec": round(lanes / t, 1),
         }
+    return out
+
+
+def run_node_eval(quick: bool = False) -> dict:
+    """Fused ``evaluate`` throughput per kernel-layer problem family:
+    vc (legacy adapter / fused jnp / fused+Pallas) and ds (fused jnp /
+    fused+Pallas) — the DESIGN.md §5.4 bindings measured at the solver's
+    actual unit of work."""
+    n, p, lanes = (60, 0.15, 16) if quick else (128, 0.1, 64)
+    g = gnp_graph(n, p, seed=7)
+    out = {"lanes": lanes,
+           "unit": "node evaluations / second (CPU; pallas = interpret)"}
+    out["vc"] = {
+        "instance": f"gnp:{n}:{int(p * 100)}:7",
+        "variants": _time_variants([
+            ("legacy_callbacks", make_vertex_cover_callbacks(g)),
+            ("fused_jnp", make_vertex_cover(g)),
+            ("fused_pallas", make_vertex_cover(g, backend="pallas")),
+        ], _lane_states(g, lanes), lanes)}
+    out["ds"] = {
+        "instance": f"gnp:{n}:{int(p * 100)}:7",
+        "variants": _time_variants([
+            ("fused_jnp", make_dominating_set(g)),
+            ("fused_pallas", make_dominating_set(g, backend="pallas")),
+        ], _ds_lane_states(g, lanes), lanes)}
     return out
 
 
@@ -149,9 +214,10 @@ def main(quick: bool = False) -> None:
     with open(BENCH_JSON, "w") as f:
         json.dump(node_eval, f, indent=2)
         f.write("\n")
-    for name, v in node_eval["variants"].items():
-        print("node_eval,%s,%s,%s" % (name, v["sec_per_batch"],
-                                      v["nodes_per_sec"]))
+    for fam in ("vc", "ds"):
+        for name, v in node_eval[fam]["variants"].items():
+            print("node_eval,%s,%s,%s,%s" % (fam, name, v["sec_per_batch"],
+                                             v["nodes_per_sec"]))
     print(f"node_eval -> {BENCH_JSON}")
 
 

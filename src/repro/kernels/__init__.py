@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels with jnp oracles.
+
+Layout (DESIGN.md §5):
+
+  ``bitset_ops.py``     — the universal bitset-kernel library: the
+                          masked-popcount pass (``count_stats``), its
+                          batched ``uint32[K, n, w]`` variant, and the
+                          popcount/row-reduce primitives every problem
+                          family binds to;
+  ``bitset_degree.py``  — vertex cover's binding of that library;
+  ``flash_attention.py``/``ssd_scan.py`` — model-side kernels;
+  ``ops.py``            — jitted dispatchers (Pallas on TPU, jnp oracle
+                          elsewhere, interpret-mode for off-TPU kernel
+                          execution);
+  ``ref.py``            — the pure-jnp oracles each kernel is validated
+                          against.
+"""

@@ -1,69 +1,27 @@
-"""Pallas TPU kernel: fused masked-popcount degree stats for vertex cover.
+"""Vertex-cover degree statistics as a ``bitset_ops`` binding (DESIGN.md §5.4).
 
 The solver's hot spot (paper §V): at every search-node, compute the degree
 of every alive vertex in the residual graph — popcount(adj[v] & alive) —
 then (a) pick the max-degree vertex with smallest-id tie-break (the branch
 rule) and (b) sum the alive degrees (= 2·m_alive, the bound's numerator).
-The jnp form (repro.problems.vertex_cover) materializes an [n, w] masked
-matrix per lane; this kernel fuses mask+popcount+argmax+sum over vertex
-tiles so only the running (best_degree, best_vertex, degree_sum) triple
-leaves VMEM.  One kernel launch per fused ``Problem.evaluate`` — the whole
-per-node degree work in a single pass (DESIGN.md §3).
+That is exactly the universal masked-popcount pass of
+``repro.kernels.bitset_ops.count_stats`` with mask = valid = the alive
+set, so this module is a thin argument adapter — the kernel body, grid and
+block shapes live in ``bitset_ops`` and are documented in DESIGN.md §5.1;
+the per-column contract is §5.2.
 
-Grid: ``(lanes, vertex_tiles)`` — tile axis sequential, accumulating into
-the output ref.  Ascending tile order + strict ">" update preserves the
-paper's determinism rule (ties -> smallest id).  Popcount is
-``jax.lax.population_count`` on uint32 words (VPU-friendly bitwise ops).
-
-Validated interpret=True against ref.degree_stats_ref; batching (vmap over
-lane masks, as the engine does) lifts into an extra grid dimension.
+Kept as a module (rather than folding the call sites into
+``problems/vertex_cover.py``) so the kernel library's problem bindings
+stay enumerable in one place per problem family, mirroring
+``bitset_ops.domination_stats`` for dominating set and
+``bitset_ops.stacked_count_stats`` for the stacked service.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-
-
-def _kernel(adj_ref, alive_ref, out_ref, *, tile: int, n: int, words: int):
-    t = pl.program_id(1)
-
-    neg = jnp.int32(-1)
-
-    @pl.when(t == 0)
-    def _init():
-        out_ref[0, 0] = neg          # best degree (-1: no alive vertex)
-        out_ref[0, 1] = neg          # best vertex
-        out_ref[0, 2] = jnp.int32(0)  # sum of alive degrees (2 * m_alive)
-
-    adj = adj_ref[...]               # [tile, words] uint32
-    alive = alive_ref[...]           # [1, words] uint32
-
-    masked = jnp.bitwise_and(adj, alive)
-    degs = jax.lax.population_count(masked).astype(jnp.int32).sum(
-        axis=1)                      # [tile]
-
-    # A vertex is alive iff its own bit is set in the alive mask.
-    base = t * tile
-    vid = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
-    word_ix = vid // 32
-    bit_ix = (vid % 32).astype(jnp.uint32)
-    row = jnp.take(alive[0], word_ix, axis=0)
-    is_alive = ((row >> bit_ix) & jnp.uint32(1)) == jnp.uint32(1)
-    degs = jnp.where(is_alive & (vid < n), degs, neg)
-
-    tile_best = jnp.max(degs)
-    tile_arg = base + jnp.argmax(degs).astype(jnp.int32)
-
-    best = out_ref[0, 0]
-    better = tile_best > best        # strict: earlier tile wins ties
-    out_ref[0, 0] = jnp.where(better, tile_best, best)
-    out_ref[0, 1] = jnp.where(better, tile_arg, out_ref[0, 1])
-    out_ref[0, 2] = out_ref[0, 2] + jnp.sum(jnp.maximum(degs, 0))
+from repro.kernels import bitset_ops
 
 
 def degree_stats(adj: jnp.ndarray, alive: jnp.ndarray, *,
@@ -72,25 +30,8 @@ def degree_stats(adj: jnp.ndarray, alive: jnp.ndarray, *,
     masks.  Returns int32[L, 3] = (best_degree, best_vertex, degree_sum);
     (-1, -1, 0) when no vertex is alive.  ``degree_sum`` is the sum of
     alive-vertex degrees, i.e. twice the residual edge count."""
-    n, w = adj.shape
-    lanes = alive.shape[0]
-    n_pad = (-n) % tile
-    if n_pad:
-        adj = jnp.pad(adj, ((0, n_pad), (0, 0)))
-    tiles = (n + n_pad) // tile
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, tile=tile, n=n, words=w),
-        grid=(lanes, tiles),
-        in_specs=[
-            pl.BlockSpec((tile, w), lambda l, t: (t, 0)),
-            pl.BlockSpec((1, w), lambda l, t: (l, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 3), lambda l, t: (l, 0)),
-        out_shape=jax.ShapeDtypeStruct((lanes, 3), jnp.int32),
-        interpret=interpret,
-    )(adj, alive)
-    return out
+    return bitset_ops.count_stats(adj, alive, alive, tile=tile,
+                                  interpret=interpret)[:, :3]
 
 
 def degree_argmax(adj: jnp.ndarray, alive: jnp.ndarray, *,

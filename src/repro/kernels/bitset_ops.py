@@ -1,0 +1,280 @@
+"""Universal Pallas bitset-kernel library (DESIGN.md §5).
+
+Every problem family in this repo funnels its per-search-node work through
+one shape: a ``uint32[n, w]`` table of packed bitset rows (adjacency for
+vertex cover, closed neighborhoods for dominating set, one table per slot
+for the stacked service), ANDed against a per-lane ``uint32[w]`` mask,
+popcounted per row, and reduced to a handful of scalars (max count,
+argmax with smallest-id tie-break, count sum, mask popcount).  This module
+is that machinery ONCE, as a small kernel library every problem binds to
+instead of forking its own kernel:
+
+  ``count_stats``         — THE masked-popcount pass over one table
+                            (DESIGN.md §5.2: the contract);
+  ``stacked_count_stats`` — the batched ``uint32[K, n, w]`` variant for the
+                            multi-tenant service: each lane's table is
+                            selected by its instance id via scalar
+                            prefetch (DESIGN.md §5.3);
+  ``popcount_reduce``     — per-row popcount sum (set cardinalities);
+  ``masked_row_reduce``   — OR/AND-accumulate of table rows selected by a
+                            bitset (e.g. neighborhoods of a chosen set).
+
+Problem bindings (DESIGN.md §5.4): ``bitset_degree.degree_stats`` (vertex
+cover) and ``domination_stats`` (dominating set) below are thin argument
+adapters over ``count_stats``; ``service/batch_problem.py`` binds
+``stacked_count_stats`` directly.  Grid/block choices, memory spaces and
+the determinism rules are documented in DESIGN.md §5.1 — in short: grid
+``(lanes, vertex_tiles)`` with the tile axis innermost/sequential so a
+``(1, ·)`` output block accumulates in VMEM, ascending tile order plus a
+strict ``>`` update for the paper's smallest-id tie-break, and
+``jax.lax.population_count`` on uint32 words (VPU bitwise ops, no MXU).
+
+Validated with ``interpret=True`` against the jnp oracles in ``ref.py``
+and the numpy oracles in ``tests/test_bitset_ops.py``; ``vmap`` over lane
+operands (as the engine applies per-lane ``evaluate``) lifts the lane axis
+into the kernel grid, scalar-prefetch operands included.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Column layout of the ``count_stats`` / ``stacked_count_stats`` output —
+#: the whole per-node reduction that leaves VMEM (DESIGN.md §5.2).
+BEST, ARG, SUM, MASK_COUNT = 0, 1, 2, 3
+
+
+def _valid_bits(mask_row: jnp.ndarray, base: int, tile: int, n: int):
+    """bool[tile]: is bit ``base + i`` of ``mask_row`` (uint32[w]) set, for
+    a real vertex (``vid < n``)?  The per-tile membership test shared by
+    every kernel below."""
+    vid = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
+    word_ix = vid // 32
+    bit_ix = (vid % 32).astype(jnp.uint32)
+    row = jnp.take(mask_row, word_ix, axis=0)
+    return (((row >> bit_ix) & jnp.uint32(1)) == jnp.uint32(1)) & (vid < n)
+
+
+# ---------------------------------------------------------------------------
+# count_stats: the masked-popcount contract (DESIGN.md §5.2)
+# ---------------------------------------------------------------------------
+
+def _count_stats_body(table, mask_ref, valid_ref, out_ref, *,
+                      tile: int, n: int):
+    """Shared kernel body; ``table`` is the loaded [tile, w] block."""
+    t = pl.program_id(1)
+    neg = jnp.int32(-1)
+    mask = mask_ref[...]                         # [1, w] uint32
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[0, BEST] = neg                   # max count (-1: none valid)
+        out_ref[0, ARG] = neg                    # its vertex id
+        out_ref[0, SUM] = jnp.int32(0)           # Σ max(count, 0)
+        out_ref[0, MASK_COUNT] = jax.lax.population_count(
+            mask).astype(jnp.int32).sum()        # |mask| (e.g. undominated)
+
+    rows = jnp.bitwise_and(table, mask)          # [tile, w]
+    cnts = jax.lax.population_count(rows).astype(jnp.int32).sum(axis=1)
+    base = t * tile
+    cnts = jnp.where(_valid_bits(valid_ref[...][0], base, tile, n),
+                     cnts, neg)
+
+    tile_best = jnp.max(cnts)
+    tile_arg = base + jnp.argmax(cnts).astype(jnp.int32)
+    best = out_ref[0, BEST]
+    better = tile_best > best                    # strict: earlier tile wins
+    out_ref[0, BEST] = jnp.where(better, tile_best, best)
+    out_ref[0, ARG] = jnp.where(better, tile_arg, out_ref[0, ARG])
+    out_ref[0, SUM] = out_ref[0, SUM] + jnp.sum(jnp.maximum(cnts, 0))
+
+
+def _pad_rows(table: jnp.ndarray, tile: int) -> jnp.ndarray:
+    pad = (-table.shape[-2]) % tile
+    if pad:
+        width = [(0, 0)] * (table.ndim - 2) + [(0, pad), (0, 0)]
+        table = jnp.pad(table, width)
+    return table
+
+
+def count_stats(table: jnp.ndarray, mask: jnp.ndarray, valid: jnp.ndarray,
+                *, tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """The masked-popcount pass (DESIGN.md §5.2).
+
+    ``table``: uint32[n, w] packed bitset rows; ``mask``/``valid``:
+    uint32[L, w] per-lane masks.  Returns int32[L, 4] =
+    ``(best_count, best_vertex, count_sum, mask_count)`` where
+    ``count[v] = popcount(table[v] & mask)`` for vertices whose bit is set
+    in ``valid`` (all others count -1), ``best_vertex`` breaks ties toward
+    the smallest id (-1 when nothing is valid), ``count_sum`` is
+    ``Σ max(count, 0)`` and ``mask_count = popcount(mask)``.
+    """
+    n, w = table.shape
+    lanes = mask.shape[0]
+    table = _pad_rows(table, tile)
+    tiles = table.shape[0] // tile
+
+    def kernel(table_ref, mask_ref, valid_ref, out_ref):
+        _count_stats_body(table_ref[...], mask_ref, valid_ref, out_ref,
+                          tile=tile, n=n)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(lanes, tiles),
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda l, t: (t, 0)),
+            pl.BlockSpec((1, w), lambda l, t: (l, 0)),
+            pl.BlockSpec((1, w), lambda l, t: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda l, t: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 4), jnp.int32),
+        interpret=interpret,
+    )(table, mask, valid)
+
+
+# ---------------------------------------------------------------------------
+# stacked_count_stats: the batched uint32[K, n, w] variant (DESIGN.md §5.3)
+# ---------------------------------------------------------------------------
+
+def _stacked_kernel(inst_ref, tables_ref, mask_ref, valid_ref, out_ref, *,
+                    tile: int, n: int):
+    del inst_ref                                  # consumed by the index map
+    _count_stats_body(tables_ref[0], mask_ref, valid_ref, out_ref,
+                      tile=tile, n=n)
+
+
+def stacked_count_stats(tables: jnp.ndarray, inst: jnp.ndarray,
+                        mask: jnp.ndarray, valid: jnp.ndarray, *,
+                        tile: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """``count_stats`` over stacked tables: uint32[K, n, w] + int32[L]
+    instance ids -> int32[L, 4], lane ``l`` reduced against
+    ``tables[inst[l]]``.
+
+    ``inst`` is a scalar-prefetch operand (DESIGN.md §5.3): the table
+    BlockSpec's index map reads it, so each grid step DMAs exactly ONE
+    instance's ``(tile, w)`` block into VMEM — the kernel never sees the
+    other K-1 tables, and table traffic is independent of K.  Out-of-range
+    ids are clipped (the service parks idle lanes on ``NO_INSTANCE`` = -1).
+    """
+    k, n, w = tables.shape
+    lanes = mask.shape[0]
+    inst = jnp.clip(inst.astype(jnp.int32), 0, k - 1)
+    tables = _pad_rows(tables, tile)
+    tiles = tables.shape[1] // tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(lanes, tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile, w),
+                         lambda l, t, inst_ref: (inst_ref[l], t, 0)),
+            pl.BlockSpec((1, w), lambda l, t, inst_ref: (l, 0)),
+            pl.BlockSpec((1, w), lambda l, t, inst_ref: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda l, t, inst_ref: (l, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_stacked_kernel, tile=tile, n=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((lanes, 4), jnp.int32),
+        interpret=interpret,
+    )(inst, tables, mask, valid)
+
+
+# ---------------------------------------------------------------------------
+# popcount_reduce: per-lane set cardinalities
+# ---------------------------------------------------------------------------
+
+def _popcount_kernel(rows_ref, out_ref):
+    out_ref[0, 0] = jax.lax.population_count(
+        rows_ref[...]).astype(jnp.int32).sum()
+
+
+def popcount_reduce(rows: jnp.ndarray, *,
+                    interpret: bool = True) -> jnp.ndarray:
+    """uint32[L, w] -> int32[L]: popcount of each packed row (set sizes)."""
+    lanes, w = rows.shape
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=(lanes,),
+        in_specs=[pl.BlockSpec((1, w), lambda l: (l, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda l: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 1), jnp.int32),
+        interpret=interpret,
+    )(rows)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# masked_row_reduce: OR/AND-accumulate of selected table rows
+# ---------------------------------------------------------------------------
+
+def _row_reduce_kernel(table_ref, sel_ref, out_ref, *, tile: int, n: int,
+                       op: str):
+    t = pl.program_id(1)
+    ident = jnp.uint32(0) if op == "or" else jnp.uint32(0xFFFFFFFF)
+    bitop = jnp.bitwise_or if op == "or" else jnp.bitwise_and
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref[...], ident)
+
+    selected = _valid_bits(sel_ref[...][0], t * tile, tile, n)
+    rows = jnp.where(selected[:, None], table_ref[...], ident)  # [tile, w]
+    while rows.shape[0] > 1:                     # static log2 tree reduce
+        half = rows.shape[0] // 2
+        rows = bitop(rows[:half], rows[half:half * 2])
+    out_ref[...] = bitop(out_ref[...], rows)
+
+
+def masked_row_reduce(table: jnp.ndarray, select: jnp.ndarray, *,
+                      op: str = "or", tile: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Bitwise OR (or AND) of the rows of ``table`` (uint32[n, w]) whose
+    bit is set in ``select`` (uint32[L, w]) -> uint32[L, w].  The OR form
+    with an adjacency table is ``N(S)`` for the selected set S; the AND
+    form intersects constraint rows.  Empty selection yields the identity
+    (all-zeros / all-ones)."""
+    if op not in ("or", "and"):
+        raise ValueError(f"unknown reduce op {op!r}")
+    n, w = table.shape
+    if tile & (tile - 1):
+        raise ValueError(f"tile must be a power of two, got {tile}")
+    lanes = select.shape[0]
+    table = _pad_rows(table, tile)
+    tiles = table.shape[0] // tile
+    return pl.pallas_call(
+        functools.partial(_row_reduce_kernel, tile=tile, n=n, op=op),
+        grid=(lanes, tiles),
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda l, t: (t, 0)),
+            pl.BlockSpec((1, w), lambda l, t: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda l, t: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, w), jnp.uint32),
+        interpret=interpret,
+    )(table, select)
+
+
+# ---------------------------------------------------------------------------
+# problem-facing bindings (DESIGN.md §5.4)
+# ---------------------------------------------------------------------------
+
+def domination_stats(cadj: jnp.ndarray, dominated: jnp.ndarray,
+                     cand: jnp.ndarray, fullm: jnp.ndarray, *,
+                     tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """Dominating set's node statistics as a ``count_stats`` binding:
+    mask = the undominated set, valid = the candidate set.  ``cadj``:
+    uint32[n, w] CLOSED adjacency; ``dominated``/``cand``: uint32[L, w];
+    ``fullm``: uint32[w] real-vertex mask.  Returns int32[L, 3] =
+    ``(best_coverage, branch_vertex, undominated)`` — coverage is
+    ``|N[v] \\ dominated|`` per candidate, the tie-break is smallest-id and
+    ``undominated`` comes free as the pass's mask popcount."""
+    mask = jnp.bitwise_and(fullm[None, :], jnp.bitwise_not(dominated))
+    out = count_stats(cadj, mask, cand, tile=tile, interpret=interpret)
+    return jnp.stack([out[:, BEST], out[:, ARG], out[:, MASK_COUNT]], axis=1)

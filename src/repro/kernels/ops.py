@@ -13,7 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import bitset_ops, ref
 from repro.kernels.bitset_degree import degree_argmax as _degree_pallas
 from repro.kernels.bitset_degree import degree_stats as _degree_stats_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -82,3 +82,69 @@ def degree_argmax(adj, alive, *, tile: int = 128,
                               interpret=(not _on_tpu()) if interpret is None
                               else interpret)
     return ref.degree_argmax_ref(adj, alive)
+
+
+def _dispatch(pallas_fn, ref_fn, args, *, use_pallas, interpret,
+              kernel_kw=None, ref_kw=None):
+    """Shared backend resolution for the bitset_ops dispatchers: Pallas on
+    TPU (or when forced), jnp oracle elsewhere; interpret defaults to the
+    kernel body off-TPU."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return pallas_fn(*args,
+                         interpret=(not _on_tpu()) if interpret is None
+                         else interpret, **(kernel_kw or {}))
+    return ref_fn(*args, **(ref_kw or {}))
+
+
+@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
+def count_stats(table, mask, valid, *, tile: int = 128,
+                use_pallas: Optional[bool] = None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """The universal masked-popcount pass (DESIGN.md §5.2):
+    (best_count, best_vertex, count_sum, mask_count) per lane."""
+    return _dispatch(bitset_ops.count_stats, ref.count_stats_ref,
+                     (table, mask, valid), use_pallas=use_pallas,
+                     interpret=interpret, kernel_kw={"tile": tile})
+
+
+@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
+def stacked_count_stats(tables, inst, mask, valid, *, tile: int = 128,
+                        use_pallas: Optional[bool] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Batched uint32[K, n, w] masked-popcount pass (DESIGN.md §5.3) —
+    each lane reduced against its instance's table."""
+    return _dispatch(bitset_ops.stacked_count_stats,
+                     ref.stacked_count_stats_ref,
+                     (tables, inst, mask, valid), use_pallas=use_pallas,
+                     interpret=interpret, kernel_kw={"tile": tile})
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def popcount_reduce(rows, *, use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """uint32[L, w] -> int32[L] packed-set cardinalities."""
+    return _dispatch(bitset_ops.popcount_reduce, ref.popcount_reduce_ref,
+                     (rows,), use_pallas=use_pallas, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("op", "tile", "use_pallas", "interpret"))
+def masked_row_reduce(table, select, *, op: str = "or", tile: int = 128,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """OR/AND-accumulate of table rows selected by a bitset."""
+    return _dispatch(bitset_ops.masked_row_reduce, ref.masked_row_reduce_ref,
+                     (table, select), use_pallas=use_pallas,
+                     interpret=interpret,
+                     kernel_kw={"op": op, "tile": tile}, ref_kw={"op": op})
+
+
+@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
+def domination_stats(cadj, dominated, cand, fullm, *, tile: int = 128,
+                     use_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(best_coverage, branch_vertex, undominated) per lane — the fused
+    dominating-set node statistics (see problems.dominating_set)."""
+    return _dispatch(bitset_ops.domination_stats, ref.domination_stats_ref,
+                     (cadj, dominated, cand, fullm), use_pallas=use_pallas,
+                     interpret=interpret, kernel_kw={"tile": tile})

@@ -2,6 +2,9 @@
 
 flash_attention -> repro.models.attention.blocked_attention
 ssd_scan        -> repro.models.ssm.ssd_chunked
+bitset_ops      -> count_stats / stacked_count_stats / popcount_reduce /
+                   masked_row_reduce / domination_stats below
+                   (DESIGN.md §5.2's contract, stated in plain jnp)
 bitset_degree   -> degree_stats / degree_argmax below (mirrors
                    problems.vertex_cover)
 """
@@ -17,6 +20,77 @@ from repro.models.ssm import ssd_chunked
 
 def ssd_scan_ref(x, dt, a, b, c, d, chunk: int = 64):
     return ssd_chunked(x, dt, a, b, c, d, chunk=chunk)
+
+
+def _bit_set(mask: jnp.ndarray, n: int) -> jnp.ndarray:
+    """bool[n]: is bit v of the packed uint32[w] mask set?"""
+    vid = jnp.arange(n)
+    word = vid // 32
+    bit = (vid % 32).astype(jnp.uint32)
+    return ((mask[word] >> bit) & jnp.uint32(1)) == jnp.uint32(1)
+
+
+def _count_stats_one(table: jnp.ndarray, mask: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    n = table.shape[0]
+    rows = jnp.bitwise_and(table, mask[None, :])
+    cnts = jax.lax.population_count(rows).sum(axis=1).astype(jnp.int32)
+    cnts = jnp.where(_bit_set(valid, n), cnts, jnp.int32(-1))
+    best = jnp.max(cnts)
+    arg = jnp.argmax(cnts).astype(jnp.int32)     # first max = smallest id
+    total = jnp.sum(jnp.maximum(cnts, 0))
+    mcount = jax.lax.population_count(mask).sum().astype(jnp.int32)
+    return jnp.stack([best, jnp.where(best < 0, jnp.int32(-1), arg),
+                      total, mcount])
+
+
+def count_stats_ref(table: jnp.ndarray, mask: jnp.ndarray,
+                    valid: jnp.ndarray) -> jnp.ndarray:
+    """table uint32[n, w]; mask/valid uint32[L, w] -> int32[L, 4] per the
+    masked-popcount contract (DESIGN.md §5.2)."""
+    return jax.vmap(lambda m, v: _count_stats_one(table, m, v))(mask, valid)
+
+
+def stacked_count_stats_ref(tables: jnp.ndarray, inst: jnp.ndarray,
+                            mask: jnp.ndarray,
+                            valid: jnp.ndarray) -> jnp.ndarray:
+    """tables uint32[K, n, w]; inst int32[L]; mask/valid uint32[L, w] ->
+    int32[L, 4], lane l reduced against tables[clip(inst[l])]."""
+    k = tables.shape[0]
+    inst = jnp.clip(inst.astype(jnp.int32), 0, k - 1)
+    return jax.vmap(
+        lambda i, m, v: _count_stats_one(tables[i], m, v))(inst, mask, valid)
+
+
+def popcount_reduce_ref(rows: jnp.ndarray) -> jnp.ndarray:
+    """uint32[L, w] -> int32[L]."""
+    return jax.lax.population_count(rows).sum(axis=-1).astype(jnp.int32)
+
+
+def masked_row_reduce_ref(table: jnp.ndarray, select: jnp.ndarray, *,
+                          op: str = "or") -> jnp.ndarray:
+    """table uint32[n, w]; select uint32[L, w] -> uint32[L, w]: OR/AND of
+    the selected rows (identity for an empty selection)."""
+    if op not in ("or", "and"):
+        raise ValueError(f"unknown reduce op {op!r}")
+    n = table.shape[0]
+    ident = jnp.uint32(0) if op == "or" else jnp.uint32(0xFFFFFFFF)
+    bitop = jnp.bitwise_or if op == "or" else jnp.bitwise_and
+
+    def one(sel):
+        rows = jnp.where(_bit_set(sel, n)[:, None], table, ident)
+        return jax.lax.reduce(rows, ident, bitop, (0,))
+
+    return jax.vmap(one)(select)
+
+
+def domination_stats_ref(cadj: jnp.ndarray, dominated: jnp.ndarray,
+                         cand: jnp.ndarray, fullm: jnp.ndarray) -> jnp.ndarray:
+    """Dominating set's (best_coverage, branch_vertex, undominated) in plain
+    jnp — the oracle for ``bitset_ops.domination_stats``."""
+    mask = jnp.bitwise_and(fullm[None, :], jnp.bitwise_not(dominated))
+    out = count_stats_ref(cadj, mask, cand)
+    return jnp.stack([out[:, 0], out[:, 1], out[:, 3]], axis=1)
 
 
 def degree_stats_ref(adj: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:

@@ -2,13 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve_solver \
       --instances vc:gnp:20:30:5,ds:gnp:16:30:7,vc:reg:24:4:1 \
-      --lanes 32 --slots 4 [--ckpt svc.ckpt] [--resume]
+      --lanes 32 --slots 4 [--backend pallas] [--ckpt svc.ckpt] [--resume]
 
 Each instance spec is ``<family>:<instance>`` where ``<family>`` is
 ``vc`` | ``ds`` and ``<instance>`` follows ``repro.launch.solve`` syntax
 (``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``, ``cell60``).
 ``--repeat R`` replays the whole mix R times (distinct request ids) to
-exercise continuous batching past the slot count.
+exercise continuous batching past the slot count.  ``--backend pallas``
+routes the shared stacked evaluate through the batched masked-popcount
+kernel (DESIGN.md §5.3) — results are bitwise-identical to jnp.
 """
 
 from __future__ import annotations
@@ -41,6 +43,8 @@ def main() -> None:
     ap.add_argument("--repeat", type=int, default=1)
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+                    help="shared-evaluate kernel backend (DESIGN.md §5.3)")
     ap.add_argument("--steps-per-round", type=int, default=64)
     ap.add_argument("--ckpt", default=None,
                     help="service checkpoint path (written every "
@@ -57,7 +61,8 @@ def main() -> None:
     workload = parse_workload(args.instances, args.repeat)
     if args.resume:
         svc = SolverService.restore(args.ckpt, num_lanes=args.lanes,
-                                    steps_per_round=args.steps_per_round)
+                                    steps_per_round=args.steps_per_round,
+                                    backend=args.backend)
         print(f"restored service: slots={svc.slot_rid} "
               f"pool={len(svc.pool)} rounds={svc.rounds}")
         # In-flight slots finish under their checkpointed rids; the
@@ -71,14 +76,16 @@ def main() -> None:
         max_n = max(g.n for _, g in workload)
         svc = SolverService(max_n=max_n, slots=args.slots,
                             num_lanes=args.lanes,
-                            steps_per_round=args.steps_per_round)
+                            steps_per_round=args.steps_per_round,
+                            backend=args.backend)
         reqs = [SolveRequest(rid=i, graph=g, family=fam)
                 for i, (fam, g) in enumerate(workload)]
     for r in reqs:
         svc.submit(r)
 
     print(f"serving {len(reqs)} requests over {args.lanes} lanes / "
-          f"{svc.spec.k} slots (padded n={svc.spec.n})")
+          f"{svc.spec.k} slots (padded n={svc.spec.n}, "
+          f"backend={svc.backend})")
     t0 = time.time()
     while svc._has_work():
         svc.step_round()

@@ -13,8 +13,8 @@ import argparse
 import time
 
 from repro.core.distributed import solve
-from repro.problems import (cell60_graph, gnp_graph, make_dominating_set,
-                            make_vertex_cover, random_regularish_graph)
+from repro.problems import (PROBLEM_FACTORIES, cell60_graph, gnp_graph,
+                            problem_backends, random_regularish_graph)
 
 
 def parse_instance(spec: str):
@@ -32,9 +32,11 @@ def parse_instance(spec: str):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--problem", choices=["vc", "ds"], default="vc")
+    ap.add_argument("--problem", choices=sorted(PROBLEM_FACTORIES),
+                    default="vc")
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
-                    help="vc node-evaluation kernel backend")
+                    help="node-evaluation kernel backend (validated against "
+                         "the problem factory's advertised capabilities)")
     ap.add_argument("--instance", default="reg:48:4:1")
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--steps-per-round", type=int, default=64)
@@ -43,15 +45,17 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    if args.problem != "vc" and args.backend != "jnp":
+    # Capability check is data, not per-problem branching: every factory
+    # advertises its kernel backends (DESIGN.md §5.4), so a problem gains
+    # --backend pallas the moment its factory does.
+    supported = problem_backends(args.problem)
+    if args.backend not in supported:
         ap.error(
-            f"--backend {args.backend} is only implemented for --problem vc "
-            f"(dominating set has no Pallas node-evaluation kernel; it was "
-            f"previously ignored silently — rerun with --backend jnp)")
+            f"--backend {args.backend} is not supported by --problem "
+            f"{args.problem} (factory advertises: {', '.join(supported)})")
 
     g = parse_instance(args.instance)
-    prob = (make_vertex_cover(g, backend=args.backend)
-            if args.problem == "vc" else make_dominating_set(g))
+    prob = PROBLEM_FACTORIES[args.problem](g, backend=args.backend)
     print(f"{prob.name}: n={g.n} m={g.m} lanes={args.lanes}")
     t0 = time.time()
     payload, stats, _ = solve(

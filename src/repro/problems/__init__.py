@@ -19,5 +19,21 @@ from repro.problems.vertex_cover import (  # noqa: F401
     make_degree_stats_fn, make_vertex_cover, make_vertex_cover_callbacks,
     make_vertex_cover_py,
 )
-from repro.problems.dominating_set import make_dominating_set, make_dominating_set_py  # noqa: F401
+from repro.problems.dominating_set import (  # noqa: F401
+    make_domination_stats_fn, make_dominating_set, make_dominating_set_py,
+)
 from repro.problems.subset_sum import make_subset_sum, make_subset_sum_py  # noqa: F401
+
+#: CLI-facing graph-problem factories (``launch/solve.py``).  Each factory
+#: advertises the kernel backends it accepts via a ``backends`` attribute
+#: (DESIGN.md §5.4) — the launchers validate --backend against it instead
+#: of hard-coding per-problem knowledge.
+PROBLEM_FACTORIES = {
+    "vc": make_vertex_cover,
+    "ds": make_dominating_set,
+}
+
+
+def problem_backends(name: str) -> tuple:
+    """Kernel backends supported by registered problem ``name``."""
+    return tuple(getattr(PROBLEM_FACTORIES[name], "backends", ("jnp",)))

@@ -11,16 +11,26 @@ further pick dominates at most ``best_coverage`` new vertices).  A node
 with undominated vertices but zero possible coverage is infeasible
 (INF bound, arity 0).
 
-Fused node evaluation: the coverage vector (masked popcount over closed
-neighborhoods) and the undominated count are computed ONCE per node visit
-and shared between the solution test, the bound and both children — the
-pre-fusion three-callback form recomputed the coverage vector in both
-``apply`` and ``lower_bound``.
+Fused node evaluation (DESIGN.md §1): the coverage vector (masked popcount
+over closed neighborhoods), the branch vertex and the undominated count
+are computed ONCE per node visit and shared between the solution test, the
+bound and both children, through a pluggable ``stats_fn``:
+
+  backend="jnp"     — inline jnp (materializes the [n, w] masked matrix);
+  backend="pallas"  — ``repro.kernels.bitset_ops.domination_stats``, the
+                      universal masked-popcount kernel bound with
+                      mask = the undominated set and valid = the candidate
+                      set (DESIGN.md §5.2/§5.4; interpret-mode off-TPU).
+
+Both backends are bitwise-identical — same coverage counts, same
+smallest-id tie-break, same bound — so the search tree is invariant under
+the backend (asserted node-for-node vs the serial oracle by
+``tests/test_node_eval.py``).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +55,76 @@ def _closed_adj(graph: Graph) -> np.ndarray:
     return cadj
 
 
-def make_dominating_set(graph: Graph) -> BinaryProblem:
+#: stats_fn contract: (dominated uint32[w], cand uint32[w]) ->
+#: (best_coverage, branch_vertex, undominated) int32 scalars, where
+#: coverage[v] = |N[v] \ dominated| over candidates (-1 for
+#: non-candidates), best_coverage is the max (-1 when no candidate),
+#: branch_vertex follows the smallest-id tie-break (0 when no candidate)
+#: and undominated counts the not-yet-dominated vertices.  This is THE
+#: once-per-node computation (DESIGN.md §5.4).
+DomStatsFn = Callable[[jnp.ndarray, jnp.ndarray],
+                      Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+
+
+def make_domination_stats_fn(graph: Graph, backend: str = "jnp", *,
+                             tile: int = 128,
+                             interpret: Optional[bool] = None) -> DomStatsFn:
+    """Build the per-node domination-statistics function for ``backend``."""
     n, w = graph.n, graph.words
     cadj = jnp.asarray(_closed_adj(graph))
     fullm = jnp.asarray(full_mask(n))
+
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        def stats(dominated: jnp.ndarray, cand: jnp.ndarray):
+            out = ops.domination_stats(cadj, dominated[None, :],
+                                       cand[None, :], fullm,
+                                       tile=min(tile, max(n, 8)),
+                                       use_pallas=True, interpret=interpret)[0]
+            # Kernel reports vertex -1 when no candidate exists; the jnp
+            # argmax reports 0.  Normalize so both backends yield identical
+            # (and discarded) children on dead states.
+            return out[0], jnp.maximum(out[1], 0), out[2]
+
+        return stats
+
+    if backend != "jnp":
+        raise ValueError(f"unknown dominating-set backend {backend!r}")
+
     word = jnp.asarray(np.arange(n, dtype=np.int32) // 32)
     shift = jnp.asarray((np.arange(n, dtype=np.int32) % 32).astype(np.uint32))
     one = jnp.uint32(1)
+
+    def stats(dominated: jnp.ndarray, cand: jnp.ndarray):
+        undom_rows = jnp.bitwise_and(cadj, jnp.bitwise_not(dominated)[None, :])
+        cov = jax.lax.population_count(undom_rows).sum(axis=1).astype(
+            jnp.int32)
+        cand_f = ((cand[word] >> shift) & one) == one
+        cov = jnp.where(cand_f, cov, jnp.int32(-1))
+        rem = jnp.bitwise_and(fullm, jnp.bitwise_not(dominated))
+        u = jax.lax.population_count(rem).sum().astype(jnp.int32)
+        return jnp.max(cov), jnp.argmax(cov).astype(jnp.int32), u
+
+    return stats
+
+
+def make_dominating_set(graph: Graph, backend: str = "jnp", *,
+                        tile: int = 128, interpret: Optional[bool] = None,
+                        stats_fn: Optional[DomStatsFn] = None
+                        ) -> BinaryProblem:
+    """jnp BinaryProblem for the engine (vmap-safe, shape-static).
+
+    ``backend`` routes the per-node coverage pass (see module docstring);
+    ``stats_fn`` overrides it entirely (tests inject counting wrappers).
+    """
+    n, w = graph.n, graph.words
+    cadj = jnp.asarray(_closed_adj(graph))
+    fullm = jnp.asarray(full_mask(n))
+    one = jnp.uint32(1)
+    if stats_fn is None:
+        stats_fn = make_domination_stats_fn(graph, backend, tile=tile,
+                                            interpret=interpret)
 
     def vbit(v):
         return jnp.where(jnp.arange(w) == (v // 32),
@@ -62,27 +135,17 @@ def make_dominating_set(graph: Graph) -> BinaryProblem:
                        chosen=jnp.zeros(w, jnp.uint32), size=jnp.int32(0))
 
     def evaluate(state: DSState, best: jnp.ndarray) -> NodeEval:
-        # The ONE coverage pass: |N[v] \ dominated| for every candidate v.
-        undom_rows = jnp.bitwise_and(
-            cadj, jnp.bitwise_not(state.dominated)[None, :])
-        cov = jax.lax.population_count(undom_rows).sum(axis=1).astype(
-            jnp.int32)
-        cand_f = ((state.cand[word] >> shift) & one) == one
-        cov = jnp.where(cand_f, cov, jnp.int32(-1))
-
-        # Undominated count (one popcount of the complement).
-        rem = jnp.bitwise_and(fullm, jnp.bitwise_not(state.dominated))
-        u = jax.lax.population_count(rem).sum().astype(jnp.int32)
+        # THE one coverage pass (DESIGN.md §5.4): best |N[v] \ dominated|
+        # over candidates, its vertex, and the undominated count.
+        best_cov, v, u = stats_fn(state.dominated, state.cand)
         is_sol = u == 0
 
-        # Bound from the shared coverage vector.
-        best_cov = jnp.max(cov)
+        # Bound from the shared coverage maximum.
         infeasible = (u > 0) & (best_cov <= 0)
         need = (u + jnp.maximum(best_cov, 1) - 1) // jnp.maximum(best_cov, 1)
         lb = jnp.where(infeasible, INF_VALUE, state.size + need)
 
         # Children from the shared branch vertex.
-        v = jnp.argmax(cov).astype(jnp.int32)
         bv = vbit(v)
         new_cand = jnp.bitwise_and(state.cand, jnp.bitwise_not(bv))
         left = DSState(dominated=jnp.bitwise_or(state.dominated, cadj[v]),
@@ -97,6 +160,11 @@ def make_dominating_set(graph: Graph) -> BinaryProblem:
     return BinaryProblem(
         name=f"ds[{graph.name}]", max_depth=n, root=root, evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32))
+
+
+#: Kernel backends the factory accepts — the capability surface consumed
+#: by ``launch/solve.py``'s --backend check.
+make_dominating_set.backends = ("jnp", "pallas")
 
 
 def make_dominating_set_py(graph: Graph) -> PyProblem:

@@ -66,6 +66,11 @@ def make_subset_sum(values, target: int) -> BinaryProblem:
         payload_zero=lambda: jnp.zeros(n, jnp.int32))
 
 
+#: No bitset table to stream — nothing for the kernel layer to fuse, so the
+#: factory advertises the jnp backend only (DESIGN.md §5.4).
+make_subset_sum.backends = ("jnp",)
+
+
 def make_subset_sum_py(values, target: int) -> PyProblem:
     vals = [int(v) for v in values]
     n = len(vals)

@@ -22,8 +22,11 @@ pluggable ``stats_fn``:
 
   backend="jnp"     — inline jnp (materializes the [n, w] masked matrix);
   backend="pallas"  — ``repro.kernels.bitset_degree.degree_stats``, the
-                      tiled Pallas kernel (interpret-mode off-TPU); vmap
-                      over lanes lifts into an extra grid dimension.
+                      universal masked-popcount kernel of
+                      ``repro.kernels.bitset_ops`` bound with mask = valid
+                      = the alive set (DESIGN.md §5.2/§5.4;
+                      interpret-mode off-TPU); vmap over lanes lifts into
+                      an extra grid dimension.
 
 Both backends are bitwise-identical (same degrees, same smallest-id
 tie-break, same bound), so the search tree is invariant under the backend —
@@ -162,6 +165,11 @@ def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
         evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32),
     )
+
+
+#: Kernel backends the factory accepts — the capability surface consumed
+#: by ``launch/solve.py``'s --backend check.
+make_vertex_cover.backends = ("jnp", "pallas")
 
 
 def make_vertex_cover_callbacks(graph: Graph, *,

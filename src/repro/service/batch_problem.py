@@ -24,15 +24,28 @@ coverage.  The fused ``evaluate`` computes that pass once on
 bound, children and payload branchlessly — so a vmapped engine step over
 lanes serving different tenants stays a single fused kernel.
 
+The pass itself is backend-pluggable (``StackedSpec.bind(..., backend)``,
+same seam as the single-instance problems):
+
+  backend="jnp"     — gather ``tables.adj[inst]`` and materialize the
+                      [n, w] masked matrix per lane;
+  backend="pallas"  — ``repro.kernels.bitset_ops.stacked_count_stats``,
+                      the batched uint32[K, n, w] variant of the universal
+                      masked-popcount kernel: each lane's table block is
+                      selected by instance id via scalar prefetch, so the
+                      kernel never touches the other K-1 tables
+                      (DESIGN.md §5.3; interpret-mode off-TPU).
+
 ``StackedTables`` is runtime DATA, not a trace-time constant: the service
 driver passes it as an argument to the jitted round, so admitting a new
-instance is a host-side table write with NO recompilation.
+instance is a host-side table write with NO recompilation — under either
+backend (the stacked tables are kernel *operands*, never constants).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,14 +121,45 @@ class StackedSpec:
             fullm=np.zeros((self.k, self.words), np.uint32),
             family=np.zeros((self.k,), np.int32))
 
-    def bind(self, tables: StackedTables) -> BinaryProblem:
-        """Build the K-instance BinaryProblem over (possibly traced) tables."""
+    def bind(self, tables: StackedTables, backend: str = "jnp", *,
+             tile: int = 128,
+             interpret: Optional[bool] = None) -> BinaryProblem:
+        """Build the K-instance BinaryProblem over (possibly traced) tables.
+
+        ``backend`` routes the shared masked-popcount pass (see module
+        docstring) — "jnp" or "pallas"; both are NodeEval-identical.
+        """
         n, w, k = self.n, self.words, self.k
         word = jnp.asarray(np.arange(n, dtype=np.int32) // 32)
         shift = jnp.asarray((np.arange(n, dtype=np.int32) % 32)
                             .astype(np.uint32))
         one = jnp.uint32(1)
         zero_mask = jnp.zeros((w,), jnp.uint32)
+
+        if backend == "pallas":
+            from repro.kernels import ops
+            ktile = min(tile, max(n, 8))
+
+            def shared_stats(i, mask, validm, undom):
+                # undom is recomputed by the kernel as the pass's mask
+                # popcount (== |undominated| for DS lanes, whose mask IS
+                # the undominated set; VC lanes never consume it).
+                out = ops.stacked_count_stats(
+                    tables.adj, i[None], mask[None, :], validm[None, :],
+                    tile=ktile, use_pallas=True, interpret=interpret)[0]
+                return out[0], jnp.maximum(out[1], 0), out[2], out[3]
+        elif backend == "jnp":
+            def shared_stats(i, mask, validm, undom):
+                rows = jnp.bitwise_and(tables.adj[i], mask[None, :])
+                cnt = jax.lax.population_count(rows).sum(axis=1).astype(
+                    jnp.int32)
+                valid_f = ((validm[word] >> shift) & one) == one
+                cnt = jnp.where(valid_f, cnt, jnp.int32(-1))
+                u = jax.lax.population_count(undom).sum().astype(jnp.int32)
+                return (jnp.max(cnt), jnp.argmax(cnt).astype(jnp.int32),
+                        jnp.sum(jnp.maximum(cnt, 0)), u)
+        else:
+            raise ValueError(f"unknown stacked-service backend {backend!r}")
 
         def vbit(v):
             return jnp.where(jnp.arange(w) == (v // 32),
@@ -135,33 +179,23 @@ class StackedSpec:
 
         def evaluate(state: SvcState, best: jnp.ndarray) -> NodeEval:
             i = jnp.clip(state.inst, 0, k - 1)
-            adj_i = tables.adj[i]                     # [n, w] gather
             fullm_i = tables.fullm[i]
             is_vc = tables.family[i] == FAMILY_VC
 
-            # THE one shared pass: masked popcount over the slot's rows.
+            # THE one shared pass: masked popcount over the slot's rows
+            # (backend-pluggable, DESIGN.md §5.3).
             # VC: mask = alive set      → counts = residual degrees.
             # DS: mask = undominated set → counts = coverage |N[v] \ dom|.
-            mask = jnp.where(is_vc, state.a,
-                             jnp.bitwise_and(fullm_i,
-                                             jnp.bitwise_not(state.a)))
-            rows = jnp.bitwise_and(adj_i, mask[None, :])
-            cnt = jax.lax.population_count(rows).sum(axis=1).astype(jnp.int32)
+            undom = jnp.bitwise_and(fullm_i, jnp.bitwise_not(state.a))
+            mask = jnp.where(is_vc, state.a, undom)
             validm = jnp.where(is_vc, state.a, state.b)   # alive / candidates
-            valid_f = ((validm[word] >> shift) & one) == one
-            cnt = jnp.where(valid_f, cnt, jnp.int32(-1))
-
-            cmax = jnp.max(cnt)
-            v = jnp.argmax(cnt).astype(jnp.int32)
-            csum = jnp.sum(jnp.maximum(cnt, 0))
+            cmax, v, csum, u = shared_stats(i, mask, validm, undom)
 
             # Family-specific solution test + admissible bound.
             vc_sol = cmax <= 0
             d_eff = jnp.maximum(cmax, 1)
             vc_lb = state.size + (csum + 2 * d_eff - 1) // (2 * d_eff)
 
-            undom = jnp.bitwise_and(fullm_i, jnp.bitwise_not(state.a))
-            u = jax.lax.population_count(undom).sum().astype(jnp.int32)
             ds_sol = u == 0
             infeasible = (u > 0) & (cmax <= 0)
             bc = jnp.maximum(cmax, 1)
@@ -170,7 +204,7 @@ class StackedSpec:
 
             # Children from the shared branch vertex.
             bv = vbit(v)
-            row_v = adj_i[v]
+            row_v = tables.adj[i, v]
             nb = jnp.bitwise_and(row_v, state.a)          # vc: alive N(v)
             nb_count = jax.lax.population_count(nb).sum().astype(jnp.int32)
             new_cand = jnp.bitwise_and(state.b, jnp.bitwise_not(bv))

@@ -27,6 +27,11 @@ Elastic operation: ``save``/``restore`` persist the whole service (lane
 control state + slot tables + queue-of-record metadata) through
 ``repro.core.checkpoint``; restoring onto W' ≠ W lanes parks surplus tasks
 in an instance-tagged pending pool that drains at round boundaries.
+
+The shared evaluate's masked-popcount pass is backend-pluggable
+(``backend="jnp" | "pallas"``, forwarded to ``StackedSpec.bind`` —
+DESIGN.md §5.3); the search is bitwise-identical under either, so the
+backend is an execution choice like the lane count, not checkpoint state.
 """
 
 from __future__ import annotations
@@ -72,20 +77,22 @@ class SolverService:
     """Fixed pool of W lanes continuously batched over streamed requests."""
 
     def __init__(self, *, max_n: int, slots: int, num_lanes: int,
-                 steps_per_round: int = 64):
+                 steps_per_round: int = 64, backend: str = "jnp"):
         self.spec = StackedSpec(n=max_n, k=slots)
         self.num_lanes = num_lanes
         self.steps_per_round = steps_per_round
+        self.backend = backend                # shared-evaluate kernel backend
         self.tables = self.spec.empty_tables()           # host numpy
         self._tables_dev: Optional[StackedTables] = None
 
         spec = self.spec
 
         def _round(lanes, tables):
-            return make_round(spec.bind(tables), steps_per_round)(lanes)
+            return make_round(spec.bind(tables, backend), steps_per_round)(
+                lanes)
 
         def _rebuild(lanes, tables):
-            return ckpt.rebuild_stacks(spec.bind(tables), lanes)
+            return ckpt.rebuild_stacks(spec.bind(tables, backend), lanes)
 
         self._round = jax.jit(_round)
         self._rebuild = jax.jit(_rebuild)
@@ -310,23 +317,27 @@ class SolverService:
 
     @classmethod
     def restore(cls, path: str, *, num_lanes: int,
-                steps_per_round: int = 64) -> "SolverService":
+                steps_per_round: int = 64,
+                backend: str = "jnp") -> "SolverService":
         """Rebuild the service onto ``num_lanes`` lanes (elastic W' ≠ W).
 
         Surplus in-flight tasks wait in the pending pool and are installed
         as lanes free up; unstarted queued requests are NOT persisted —
         resubmit them.  Results for slots still in flight are produced
-        under the same rids recorded at save time.
+        under the same rids recorded at save time.  ``backend`` (like
+        ``num_lanes``) is an execution choice, not checkpoint state: a
+        service saved under one backend restores under any other with a
+        bitwise-identical search (DESIGN.md §5.3).
         """
         extra = ckpt.read_extra(path)
         n, k = (int(x) for x in extra["spec"])
         svc = cls(max_n=n, slots=k, num_lanes=num_lanes,
-                  steps_per_round=steps_per_round)
+                  steps_per_round=steps_per_round, backend=backend)
         svc.tables = StackedTables(
             adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
             family=extra["family"].copy())
         svc._touch_tables()
-        problem = svc.spec.bind(svc._tables_jnp())
+        problem = svc.spec.bind(svc._tables_jnp(), backend)
         svc.lanes, svc.pool = ckpt.restore(path, problem, num_lanes)
         for i in range(extra["pool_idx"].shape[0]):
             d, b, inst = (int(x) for x in extra["pool_meta"][i])

@@ -1,0 +1,225 @@
+"""Unit tests for the universal bitset-kernel layer (DESIGN.md §5).
+
+Every kernel in ``repro.kernels.bitset_ops`` is swept (interpret=True)
+against an independent PURE-NUMPY oracle written here — not against
+``ref.py`` — so the kernel, the jnp reference and these oracles form
+three independently-derived statements of the §5.2 contract.  ``ref.py``
+is additionally cross-checked against the same numpy oracles to keep the
+``ops.py`` dispatch honest on both sides.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bitset_ops, ops, ref
+from repro.problems.graphs import circulant_graph, full_mask, gnp_graph
+
+# ---------------------------------------------------------------------------
+# numpy oracles (independent of ref.py)
+# ---------------------------------------------------------------------------
+
+
+def np_bits(mask: np.ndarray, n: int) -> np.ndarray:
+    vid = np.arange(n)
+    return ((mask[vid // 32] >> (vid % 32).astype(np.uint32)) & 1) == 1
+
+
+def np_count_stats(table, mask, valid):
+    out = np.zeros((mask.shape[0], 4), np.int32)
+    n = table.shape[0]
+    for l in range(mask.shape[0]):
+        cnts = np.where(
+            np_bits(valid[l], n),
+            np.bitwise_count(table & mask[l][None, :]).sum(1).astype(np.int64),
+            -1)
+        best = int(cnts.max())
+        out[l] = (best, -1 if best < 0 else int(np.argmax(cnts)),
+                  int(np.maximum(cnts, 0).sum()),
+                  int(np.bitwise_count(mask[l]).sum()))
+    return out
+
+
+def np_row_reduce(table, select, op):
+    n, w = table.shape
+    ident = np.uint32(0) if op == "or" else np.uint32(0xFFFFFFFF)
+    out = np.full((select.shape[0], w), ident, np.uint32)
+    fn = np.bitwise_or if op == "or" else np.bitwise_and
+    for l in range(select.shape[0]):
+        for v in np.flatnonzero(np_bits(select[l], n)):
+            out[l] = fn(out[l], table[v])
+    return out
+
+
+def random_masks(rng, lanes, n):
+    w = (n + 31) // 32
+    m = rng.integers(0, 2**32, (lanes, w), dtype=np.uint64).astype(np.uint32)
+    return m & np.asarray(full_mask(n))[None, :]
+
+
+# ---------------------------------------------------------------------------
+# count_stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,p,lanes,tile", [
+    (40, 0.2, 4, 16), (200, 0.1, 8, 128), (130, 0.3, 6, 64),
+    (33, 0.4, 3, 32),
+])
+def test_count_stats_matches_numpy(n, p, lanes, tile):
+    g = gnp_graph(n, p, seed=n)
+    rng = np.random.default_rng(n)
+    mask, valid = random_masks(rng, lanes, n), random_masks(rng, lanes, n)
+    got = bitset_ops.count_stats(jnp.asarray(g.adj), jnp.asarray(mask),
+                                 jnp.asarray(valid), tile=tile)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np_count_stats(g.adj, mask, valid))
+    # ref.py states the same contract.
+    np.testing.assert_array_equal(
+        np.asarray(ref.count_stats_ref(jnp.asarray(g.adj),
+                                       jnp.asarray(mask),
+                                       jnp.asarray(valid))),
+        np_count_stats(g.adj, mask, valid))
+
+
+def test_count_stats_all_invalid_and_tiebreak():
+    g = circulant_graph(96, (1, 7))            # 4-regular: every vertex ties
+    adj = jnp.asarray(g.adj)
+    alive = jnp.asarray(full_mask(g.n))[None, :]
+    got = np.asarray(bitset_ops.count_stats(adj, alive, alive, tile=32))[0]
+    assert (got[0], got[1]) == (4, 0)          # smallest-id tie-break
+    # Nothing valid -> (-1, -1, 0, popcount(mask)).
+    zero = jnp.zeros_like(alive)
+    got = np.asarray(bitset_ops.count_stats(adj, alive, zero, tile=32))[0]
+    assert tuple(got) == (-1, -1, 0, 96)
+
+
+def test_ops_dispatch_equivalence():
+    """Both sides of the ops.py dispatch agree (kernel vs jnp oracle)."""
+    g = gnp_graph(50, 0.25, seed=3)
+    rng = np.random.default_rng(3)
+    mask, valid = random_masks(rng, 5, g.n), random_masks(rng, 5, g.n)
+    a = ops.count_stats(jnp.asarray(g.adj), jnp.asarray(mask),
+                        jnp.asarray(valid), use_pallas=True, interpret=True)
+    b = ops.count_stats(jnp.asarray(g.adj), jnp.asarray(mask),
+                        jnp.asarray(valid), use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# stacked_count_stats
+# ---------------------------------------------------------------------------
+
+
+def _stacked_tables(k, n, seeds):
+    from repro.service.batch_problem import pack_instance
+    w = (n + 31) // 32
+    tables = np.zeros((k, n, w), np.uint32)
+    for i, s in enumerate(seeds):
+        g = gnp_graph(n - 3 * i, 0.3, seed=s)  # varied real sizes -> padding
+        tables[i] = pack_instance(g, i % 2, n)[0]
+    return tables
+
+
+@pytest.mark.parametrize("lanes,tile", [(6, 16), (9, 64)])
+def test_stacked_count_stats_matches_numpy(lanes, tile):
+    k, n = 3, 40
+    tables = _stacked_tables(k, n, seeds=(1, 2, 3))
+    rng = np.random.default_rng(7)
+    inst = rng.integers(-1, k, lanes).astype(np.int32)   # includes NO_INSTANCE
+    mask, valid = random_masks(rng, lanes, n), random_masks(rng, lanes, n)
+    got = bitset_ops.stacked_count_stats(
+        jnp.asarray(tables), jnp.asarray(inst), jnp.asarray(mask),
+        jnp.asarray(valid), tile=tile)
+    want = np.stack([np_count_stats(tables[max(int(i), 0)],
+                                    mask[l:l + 1], valid[l:l + 1])[0]
+                     for l, i in enumerate(inst)])
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(
+        np.asarray(ref.stacked_count_stats_ref(
+            jnp.asarray(tables), jnp.asarray(inst), jnp.asarray(mask),
+            jnp.asarray(valid))), want)
+
+
+def test_stacked_count_stats_vmap_lifts_lane_axis():
+    """vmap over (inst, mask, valid) — the engine's calling convention —
+    must agree with the flat grid call, scalar prefetch included."""
+    k, n = 2, 24
+    tables = jnp.asarray(_stacked_tables(k, n, seeds=(4, 5)))
+    rng = np.random.default_rng(11)
+    inst = jnp.asarray(rng.integers(0, k, 8).astype(np.int32))
+    mask = jnp.asarray(random_masks(rng, 8, n))
+    valid = jnp.asarray(random_masks(rng, 8, n))
+    flat = bitset_ops.stacked_count_stats(tables, inst, mask, valid, tile=8)
+    mapped = jax.jit(jax.vmap(
+        lambda i, m, v: bitset_ops.stacked_count_stats(
+            tables, i[None], m[None, :], v[None, :], tile=8)[0]))(
+        inst, mask, valid)
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# popcount_reduce / masked_row_reduce
+# ---------------------------------------------------------------------------
+
+
+def test_popcount_reduce_matches_numpy():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 2**32, (7, 5), dtype=np.uint64).astype(np.uint32)
+    got = bitset_ops.popcount_reduce(jnp.asarray(rows))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.bitwise_count(rows).sum(1))
+    np.testing.assert_array_equal(
+        np.asarray(ref.popcount_reduce_ref(jnp.asarray(rows))),
+        np.bitwise_count(rows).sum(1))
+
+
+@pytest.mark.parametrize("op", ["or", "and"])
+@pytest.mark.parametrize("n,lanes,tile", [(40, 4, 16), (130, 3, 64)])
+def test_masked_row_reduce_matches_numpy(op, n, lanes, tile):
+    g = gnp_graph(n, 0.2, seed=n + 1)
+    rng = np.random.default_rng(n)
+    select = random_masks(rng, lanes, n)
+    select[0] = 0                                 # empty selection -> identity
+    got = bitset_ops.masked_row_reduce(jnp.asarray(g.adj),
+                                       jnp.asarray(select), op=op, tile=tile)
+    want = np_row_reduce(g.adj, select, op)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(
+        np.asarray(ref.masked_row_reduce_ref(jnp.asarray(g.adj),
+                                             jnp.asarray(select), op=op)),
+        want)
+
+
+def test_masked_row_reduce_rejects_bad_args():
+    g = gnp_graph(16, 0.3, seed=0)
+    sel = jnp.zeros((1, g.words), jnp.uint32)
+    with pytest.raises(ValueError):
+        bitset_ops.masked_row_reduce(jnp.asarray(g.adj), sel, op="xor")
+    with pytest.raises(ValueError):
+        bitset_ops.masked_row_reduce(jnp.asarray(g.adj), sel, tile=24)
+
+
+# ---------------------------------------------------------------------------
+# domination_stats binding
+# ---------------------------------------------------------------------------
+
+
+def test_domination_stats_matches_numpy():
+    from repro.problems.dominating_set import _closed_adj
+    g = gnp_graph(30, 0.2, seed=9)
+    cadj = _closed_adj(g)
+    fm = np.asarray(full_mask(g.n))
+    rng = np.random.default_rng(9)
+    dominated = random_masks(rng, 5, g.n)
+    cand = random_masks(rng, 5, g.n)
+    got = bitset_ops.domination_stats(
+        jnp.asarray(cadj), jnp.asarray(dominated), jnp.asarray(cand),
+        jnp.asarray(fm), tile=16)
+    want = np_count_stats(cadj, fm[None, :] & ~dominated, cand)[:, [0, 1, 3]]
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(
+        np.asarray(ref.domination_stats_ref(
+            jnp.asarray(cadj), jnp.asarray(dominated), jnp.asarray(cand),
+            jnp.asarray(fm))), want)

@@ -1,0 +1,57 @@
+"""Launcher capability checks (ISSUE 3 satellite).
+
+``launch/solve.py`` used to hard-code "pallas is vc-only" and fail fast on
+``--backend pallas --problem ds``.  The check is now DATA: every problem
+factory advertises its kernel backends (``backends`` attribute, DESIGN.md
+§5.4) and the CLI validates --backend against the registry — so ds+pallas
+is accepted the moment the factory supports it, and a hypothetical
+jnp-only problem still fails fast with the capability list in the error.
+"""
+
+import sys
+
+import pytest
+
+from repro.launch import solve
+from repro.problems import (PROBLEM_FACTORIES, make_subset_sum,
+                            problem_backends)
+
+
+def test_factories_advertise_backends():
+    assert problem_backends("vc") == ("jnp", "pallas")
+    assert problem_backends("ds") == ("jnp", "pallas")
+    assert make_subset_sum.backends == ("jnp",)     # no bitset table
+
+
+def run_main(argv, monkeypatch):
+    monkeypatch.setattr(sys, "argv", ["solve"] + argv)
+    solve.main()
+
+
+def test_solve_cli_accepts_ds_pallas(monkeypatch, capsys):
+    """The stale fail-fast is gone: a ds Pallas solve runs end-to-end and
+    prints the same optimum as the jnp backend."""
+    args = ["--problem", "ds", "--instance", "gnp:10:30:4", "--lanes", "4",
+            "--steps-per-round", "16"]
+    run_main(args + ["--backend", "pallas"], monkeypatch)
+    out_pallas = capsys.readouterr().out
+    run_main(args + ["--backend", "jnp"], monkeypatch)
+    out_jnp = capsys.readouterr().out
+    opt = [l for l in out_pallas.splitlines() if "optimum=" in l][0]
+    assert "optimum=" in opt
+    assert (opt.split("optimum=")[1].split()[0]
+            == [l for l in out_jnp.splitlines()
+                if "optimum=" in l][0].split("optimum=")[1].split()[0])
+
+
+def test_solve_cli_rejects_unsupported_backend(monkeypatch):
+    """A factory that does not advertise pallas still fails fast, with the
+    advertised capability list in the error message."""
+    def jnp_only_factory(graph, backend="jnp"):
+        raise AssertionError("factory must not be called on a rejected run")
+
+    jnp_only_factory.backends = ("jnp",)
+    monkeypatch.setitem(PROBLEM_FACTORIES, "ds", jnp_only_factory)
+    with pytest.raises(SystemExit):
+        run_main(["--problem", "ds", "--instance", "gnp:10:30:4",
+                  "--backend", "pallas"], monkeypatch)

@@ -23,7 +23,8 @@ from repro.core.engine import init_lanes, make_expand
 from repro.core.serial import serial_rb
 from repro.problems import (
     gnp_graph, random_regularish_graph,
-    make_degree_stats_fn, make_vertex_cover, make_vertex_cover_callbacks,
+    make_degree_stats_fn, make_domination_stats_fn, make_dominating_set,
+    make_dominating_set_py, make_vertex_cover, make_vertex_cover_callbacks,
     make_vertex_cover_py,
 )
 
@@ -127,6 +128,73 @@ def test_backend_rejects_unknown():
     g = gnp_graph(8, 0.3, seed=0)
     with pytest.raises(ValueError):
         make_vertex_cover(g, backend="cuda")
+    with pytest.raises(ValueError):
+        make_dominating_set(g, backend="cuda")
+
+
+# -- 4. dominating set: pallas backend == jnp backend -------------------------
+# (the backend-equivalence sweep of DESIGN.md §5.4; the stacked-service leg
+# lives in tests/test_service.py)
+
+
+@pytest.mark.parametrize("n,p,seed", [(12, 0.3, 9), (14, 0.25, 2)])
+def test_ds_pallas_backend_matches_serial_tree(n, p, seed):
+    """Node-for-node: the Pallas-backed ds engine walks the oracle's tree."""
+    g = gnp_graph(n, p, seed=seed)
+    serial_best, serial_nodes, _ = serial_rb(make_dominating_set_py(g))
+    prob = make_dominating_set(g, backend="pallas", tile=32)
+    lanes = init_lanes(prob, 1)
+    lanes = make_expand(prob, 200_000)(lanes)
+    assert not bool(lanes.active.any())
+    assert int(lanes.best.min()) == serial_best
+    assert int(lanes.nodes.sum()) == serial_nodes
+
+
+def test_ds_pallas_backend_nodeeval_bitwise_identical():
+    """Every NodeEval field agrees between ds backends along a search walk,
+    including infeasible nodes (zero-coverage states)."""
+    g = gnp_graph(14, 0.3, seed=2)
+    pj = make_dominating_set(g)
+    pp = make_dominating_set(g, backend="pallas", tile=16)
+    frontier = [pj.root()]
+    seen = 0
+    while frontier and seen < 40:
+        state = frontier.pop()
+        ej = pj.evaluate(state, INF_VALUE)
+        ep = pp.evaluate(state, INF_VALUE)
+        for a, b in zip(jax.tree_util.tree_leaves(ej),
+                        jax.tree_util.tree_leaves(ep)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        seen += 1
+        if not bool(ej.is_solution):
+            frontier += [ej.left, ej.right]
+
+
+def test_ds_stats_fn_backends_agree_on_dead_state():
+    """All-dominated / no-candidate states (kernel reports vertex -1, jnp
+    argmax reports 0) must still produce identical discarded children."""
+    g = gnp_graph(10, 0.4, seed=4)
+    sj = make_domination_stats_fn(g)
+    sp = make_domination_stats_fn(g, backend="pallas", tile=8)
+    from repro.problems.graphs import full_mask
+    full = jnp.asarray(np.asarray(full_mask(g.n)))
+    zero = jnp.zeros_like(full)
+    for dominated, cand in [(full, zero), (full, full), (zero, zero)]:
+        a = [np.asarray(x) for x in sj(dominated, cand)]
+        b = [np.asarray(x) for x in sp(dominated, cand)]
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ds_pallas_multilane_solve():
+    """Steals + CONVERTINDEX replay also route through the ds kernel."""
+    g = gnp_graph(12, 0.3, seed=9)
+    serial_best, _, _ = serial_rb(make_dominating_set_py(g))
+    payload, stats, _ = solve(
+        make_dominating_set(g, backend="pallas", tile=16),
+        num_lanes=4, steps_per_round=64, bootstrap_rounds=2,
+        bootstrap_steps=4)
+    assert stats.best == serial_best
+    assert int(np.bitwise_count(np.asarray(payload)).sum()) == serial_best
 
 
 # -- derived helpers ----------------------------------------------------------

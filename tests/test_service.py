@@ -12,6 +12,7 @@ import os
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -82,6 +83,81 @@ def test_service_matches_serial_oracles(lanes):
         assert results[i].optimum == ORACLES[i], (i, family, graph.name)
         assert_valid_payload(family, graph, results[i].payload,
                              results[i].optimum)
+
+
+# -- kernel backend: pallas stacked evaluate == jnp stacked evaluate ----------
+# (the stacked-service leg of the DESIGN.md §5.4 backend-equivalence sweep)
+
+
+def _mixed_tables(n=14):
+    spec = StackedSpec(n=n, k=3)
+    tables_np = spec.empty_tables()
+    mix = [("vc", gnp_graph(14, 0.3, seed=7)), ("ds", gnp_graph(12, 0.3, seed=9)),
+           ("vc", gnp_graph(10, 0.4, seed=1))]
+    for slot, (fam, g) in enumerate(mix):
+        adj, fm, f = pack_instance(g, 0 if fam == "vc" else 1, n)
+        tables_np.adj[slot], tables_np.fullm[slot] = adj, fm
+        tables_np.family[slot] = f
+    return spec, type(tables_np)(*(jnp.asarray(t) for t in tables_np))
+
+
+def test_stacked_backend_nodeeval_bitwise_identical():
+    """Walk both family trees from every slot root: each NodeEval field must
+    agree between the jnp and the batched-Pallas stacked evaluate."""
+    from repro.core.api import INF_VALUE
+    spec, tables = _mixed_tables()
+    bj = spec.bind(tables)
+    bp = spec.bind(tables, backend="pallas", tile=16)
+    frontier = [bj.instance_root(jnp.int32(s)) for s in range(spec.k)]
+    seen = 0
+    while frontier and seen < 60:
+        state = frontier.pop()
+        ej = bj.evaluate(state, INF_VALUE)
+        ep = bp.evaluate(state, INF_VALUE)
+        for a, b in zip(jax.tree_util.tree_leaves(ej),
+                        jax.tree_util.tree_leaves(ep)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        seen += 1
+        if not bool(ej.is_solution):
+            frontier += [ej.left, ej.right]
+    assert seen == 60
+
+
+def test_stacked_bind_rejects_unknown_backend():
+    spec, tables = _mixed_tables()
+    with pytest.raises(ValueError):
+        spec.bind(tables, backend="cuda")
+
+
+def test_service_pallas_backend_matches_serial_oracles():
+    """Full continuous-batching drain through the batched stacked kernel:
+    every tenant still lands exactly on its serial optimum."""
+    svc = SolverService(max_n=18, slots=4, num_lanes=8, steps_per_round=16,
+                        backend="pallas")
+    _, results = run_requests(svc)
+    for i, (family, graph) in enumerate(MIX):
+        assert results[i].optimum == ORACLES[i], (i, family, graph.name)
+        assert_valid_payload(family, graph, results[i].payload,
+                             results[i].optimum)
+
+
+def test_service_backend_crosses_checkpoints(tmp_path):
+    """Save under jnp, restore under pallas (backend is an execution choice,
+    not checkpoint state — driver docstring): identical results."""
+    svc = SolverService(max_n=18, slots=4, num_lanes=8, steps_per_round=4)
+    for i, (f, g) in enumerate(MIX):
+        svc.submit(SolveRequest(rid=i, graph=g, family=f))
+    svc.step_round()
+    svc.step_round()
+    assert any(r >= 0 for r in svc.slot_rid)
+    path = str(tmp_path / "svc.ckpt")
+    svc.save(path)
+
+    svc2 = SolverService.restore(path, num_lanes=8, steps_per_round=16,
+                                 backend="pallas")
+    results = svc2.run()
+    for i, (family, graph) in enumerate(MIX):
+        assert results[i].optimum == ORACLES[i], (i, family, graph.name)
 
 
 @pytest.mark.parametrize("w_before,w_after", [(8, 32), (32, 7)])

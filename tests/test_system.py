@@ -49,17 +49,15 @@ def test_solver_cli_with_checkpoint(tmp_path):
     assert "optimum=" in out
 
 
-def test_solver_cli_ds_pallas_fails_fast():
-    """--backend pallas with --problem ds used to be silently ignored (ds
-    only has the jnp path); it must now be a clear argparse error."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    proc = subprocess.run(
-        [sys.executable, "-m", "repro.launch.solve", "--problem", "ds",
-         "--backend", "pallas", "--instance", "gnp:10:30:1"],
-        env=env, cwd=REPO, capture_output=True, text=True, timeout=120)
-    assert proc.returncode != 0
-    assert "only implemented for --problem vc" in proc.stderr
+def test_solver_cli_ds_pallas_solves():
+    """--backend pallas with --problem ds used to fail fast (ds had no
+    kernel path); since the bitset_ops layer (DESIGN.md §5) it must solve —
+    the capability check is factory-driven (tests/test_launch_cli.py covers
+    the rejection path for jnp-only factories)."""
+    out = run_script(["-m", "repro.launch.solve", "--problem", "ds",
+                      "--backend", "pallas", "--instance", "gnp:10:30:1",
+                      "--lanes", "4", "--steps-per-round", "16"])
+    assert "optimum=" in out
 
 
 def test_serve_solver_cli_smoke():

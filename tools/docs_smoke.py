@@ -1,0 +1,102 @@
+"""Execute the README's ``bash`` command blocks so documented invocations
+can never rot (CI job ``docs-smoke``).
+
+Extraction rules, kept deliberately dumb so the README stays plain
+markdown:
+
+  * only fenced blocks whose info string is exactly ``bash`` run;
+  * backslash continuations are joined into one command;
+  * ``#`` end-of-line comments are allowed (stripped by bash itself);
+  * commands matching ``--skip`` (default: ``pytest``, because the tier-1
+    suite is its own CI job) are reported and not executed.
+
+Usage:
+
+  python tools/docs_smoke.py [--readme README.md] [--list] [--skip REGEX]
+
+Each command runs through ``bash -c`` from the repo root with the
+inherited environment; the first failure aborts with its exit code.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_bash_commands(text: str) -> list:
+    """-> list of commands from ``bash`` fenced blocks, continuations
+    joined."""
+    commands, in_bash, pending = [], False, ""
+    for line in text.splitlines():
+        m = FENCE_RE.match(line)
+        if m:
+            if in_bash and pending:
+                commands.append(pending.strip())
+                pending = ""
+            in_bash = not in_bash and m.group(1) == "bash"
+            continue
+        if not in_bash:
+            continue
+        if line.rstrip().endswith("\\"):
+            pending += line.rstrip()[:-1] + " "
+            continue
+        pending += line
+        if pending.strip() and not pending.lstrip().startswith("#"):
+            commands.append(pending.strip())
+        pending = ""
+    return commands
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--skip", default="pytest",
+                    help="regex of commands to report but not execute")
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted commands and exit")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.readme).resolve().parent
+    commands = extract_bash_commands(
+        pathlib.Path(args.readme).read_text(encoding="utf-8"))
+    if not commands:
+        print(f"docs-smoke: no bash commands found in {args.readme}",
+              file=sys.stderr)
+        return 1
+
+    skip = re.compile(args.skip) if args.skip else None
+    if args.list:
+        for cmd in commands:
+            mark = "SKIP " if skip and skip.search(cmd) else "RUN  "
+            print(mark + cmd)
+        return 0
+
+    failures = 0
+    for i, cmd in enumerate(commands, 1):
+        if skip and skip.search(cmd):
+            print(f"[{i}/{len(commands)}] SKIP {cmd}", flush=True)
+            continue
+        print(f"[{i}/{len(commands)}] RUN  {cmd}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(["bash", "-c", cmd], cwd=root)
+        print(f"[{i}/{len(commands)}] exit={proc.returncode} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+        if proc.returncode != 0:
+            failures = proc.returncode
+            break
+    if failures:
+        print("docs-smoke: FAILED", file=sys.stderr)
+        return failures
+    print("docs-smoke: all documented commands ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
