@@ -25,15 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timed, write_csv
+from repro import registry
 from repro.core.api import INF_VALUE
 from repro.kernels import bitset_ops, ref
 from repro.kernels.bitset_degree import degree_argmax
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.problems.dominating_set import DSState, make_dominating_set
+from repro.problems.dominating_set import DSState
 from repro.problems.graphs import gnp_graph, full_mask
-from repro.problems.vertex_cover import (VCState, make_vertex_cover,
-                                         make_vertex_cover_callbacks)
+from repro.problems.vertex_cover import VCState, make_vertex_cover_callbacks
 
 BENCH_JSON = os.path.normpath(os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_node_eval.json"))
@@ -185,18 +185,22 @@ def run_node_eval(quick: bool = False) -> dict:
     g = gnp_graph(n, p, seed=7)
     out = {"lanes": lanes,
            "unit": "node evaluations / second (CPU; pallas = interpret)"}
+    # Problems are built through the registry's capability-checked front
+    # door (ISSUE 4); only the pre-fusion baseline bypasses it, since the
+    # legacy adapter is deliberately not a registered family.
+    vc, ds = registry.get("vc"), registry.get("ds")
     out["vc"] = {
         "instance": f"gnp:{n}:{int(p * 100)}:7",
         "variants": _time_variants([
             ("legacy_callbacks", make_vertex_cover_callbacks(g)),
-            ("fused_jnp", make_vertex_cover(g)),
-            ("fused_pallas", make_vertex_cover(g, backend="pallas")),
+            ("fused_jnp", vc.build(g)),
+            ("fused_pallas", vc.build(g, backend="pallas")),
         ], _lane_states(g, lanes), lanes)}
     out["ds"] = {
         "instance": f"gnp:{n}:{int(p * 100)}:7",
         "variants": _time_variants([
-            ("fused_jnp", make_dominating_set(g)),
-            ("fused_pallas", make_dominating_set(g, backend="pallas")),
+            ("fused_jnp", ds.build(g)),
+            ("fused_pallas", ds.build(g, backend="pallas")),
         ], _ds_lane_states(g, lanes), lanes)}
     return out
 
@@ -211,8 +215,18 @@ def main(quick: bool = False) -> None:
     print(f"kernel_micro -> {path}")
 
     node_eval = run_node_eval(quick)
+    # Merge-write: keep any per-family entries a previous run recorded that
+    # this invocation did not re-measure (mirrors BENCH_service.json).
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged.update(node_eval)
     with open(BENCH_JSON, "w") as f:
-        json.dump(node_eval, f, indent=2)
+        json.dump(merged, f, indent=2)
         f.write("\n")
     for fam in ("vc", "ds"):
         for name, v in node_eval[fam]["variants"].items():

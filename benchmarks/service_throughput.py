@@ -14,6 +14,9 @@ effects compound:
 
 Writes ``BENCH_service.json`` at the repo root and a CSV artifact; every
 optimum is asserted against the serial oracle before timing is reported.
+Both legs run through the ``repro.solver.Solver`` facade (ISSUE 4), so
+this benchmark doubles as the proof that the session layer adds no
+measurable overhead over the pre-facade drivers.
 
 ``--backend`` selects the stacked shared-evaluate kernel (DESIGN.md §5.3):
 ``jnp`` (default), ``pallas`` or ``both``.  The Pallas leg runs the kernel
@@ -29,12 +32,10 @@ import os
 import time
 
 from benchmarks.common import write_csv
-from repro.core.distributed import solve
-from repro.core.serial import serial_rb
-from repro.problems import (gnp_graph, make_dominating_set,
-                            make_dominating_set_py, make_vertex_cover,
-                            make_vertex_cover_py, random_regularish_graph)
-from repro.service import SolveRequest, SolverService
+from repro import registry
+from repro.problems import gnp_graph, random_regularish_graph
+from repro.service import SolveRequest
+from repro.solver import Solver, SolverConfig
 
 OUT = os.path.normpath(os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_service.json"))
@@ -60,21 +61,23 @@ def instance_mix(quick: bool):
 
 
 def oracle(family: str, graph) -> int:
-    py = (make_vertex_cover_py(graph) if family == "vc"
-          else make_dominating_set_py(graph))
-    return serial_rb(py)[0]
+    return Solver().oracle(registry.problem(family, graph)).best
 
 
 def run_sequential(mix, oracles) -> float:
-    """Timed region covers ONLY the solves (oracle checks run outside)."""
+    """Timed region covers ONLY the solves (oracle checks run outside).
+
+    Facade-driven (ISSUE 4): one Solver session, K sequential solves —
+    the session layer must add no measurable overhead over the old
+    ``core.distributed.solve`` loop it replaced.
+    """
+    solver = Solver(SolverConfig(lanes=LANES, steps_per_round=STEPS,
+                                 bootstrap_rounds=2, bootstrap_steps=4))
     t0 = time.perf_counter()
     best = []
     for family, graph in mix:
-        prob = (make_vertex_cover(graph) if family == "vc"
-                else make_dominating_set(graph))
-        _, stats, _ = solve(prob, num_lanes=LANES, steps_per_round=STEPS,
-                            bootstrap_rounds=2, bootstrap_steps=4)
-        best.append(stats.best)
+        res = solver.solve(registry.problem(family, graph))
+        best.append(res.stats.best)
     wall = time.perf_counter() - t0
     for (family, graph), got, want in zip(mix, best, oracles):
         assert got == want, (graph.name, got, want)
@@ -83,8 +86,9 @@ def run_sequential(mix, oracles) -> float:
 
 def run_service(mix, oracles, backend: str = "jnp") -> float:
     max_n = max(g.n for _, g in mix)
-    svc = SolverService(max_n=max_n, slots=SLOTS, num_lanes=LANES,
-                        steps_per_round=STEPS, backend=backend)
+    svc = Solver(SolverConfig(lanes=LANES, steps_per_round=STEPS,
+                              backend=backend)).serve(max_n=max_n,
+                                                      slots=SLOTS)
     reqs = [SolveRequest(rid=i, graph=g, family=fam)
             for i, (fam, g) in enumerate(mix)]
     t0 = time.perf_counter()

@@ -8,7 +8,7 @@ Two measurements per (instance, core count):
    per tick) — the machine-independent time unit; T_S / T_R per core match
    the paper's table semantics.
 
-2. *BSP/JAX engine* — repro.core.distributed.solve with W lanes; the
+2. *BSP/JAX engine* — the repro.solver.Solver facade with W lanes; the
    makespan analogue is engine rounds x R + steal phases.  Optima are
    asserted equal to SERIAL-RB.
 
@@ -22,10 +22,10 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import write_csv
-from repro.core.distributed import solve
 from repro.core.serial import ParallelRBSimulator, serial_rb
 from repro.problems import (gnp_graph, make_vertex_cover,
                             make_vertex_cover_py, random_regularish_graph)
+from repro.solver import Solver, SolverConfig
 
 CORES = [1, 2, 4, 8, 16, 32]
 LANES = [1, 4, 16, 64]
@@ -60,8 +60,9 @@ def run(quick: bool = False) -> list:
         prob = make_vertex_cover(g)
         base_rounds = None
         for w in lanes:
-            _, stats, _ = solve(prob, num_lanes=w, steps_per_round=64,
-                                bootstrap_rounds=3, bootstrap_steps=8)
+            stats = Solver(SolverConfig(
+                lanes=w, steps_per_round=64, bootstrap_rounds=3,
+                bootstrap_steps=8)).solve(prob).stats
             assert stats.best == serial_best, (name, w)
             if base_rounds is None:
                 base_rounds = stats.rounds

@@ -4,10 +4,10 @@ table1; DS instances are nxm.ds-style random graphs)."""
 from __future__ import annotations
 
 from benchmarks.common import write_csv
-from repro.core.distributed import solve
 from repro.core.serial import ParallelRBSimulator, serial_rb
 from repro.problems import (gnp_graph, make_dominating_set,
                             make_dominating_set_py)
+from repro.solver import Solver, SolverConfig
 
 CORES = [1, 2, 4, 8, 16, 32]
 LANES = [1, 4, 16]
@@ -38,8 +38,9 @@ def run(quick: bool = False) -> list:
         prob = make_dominating_set(g)
         base_r = None
         for w in (LANES[:2] if quick else LANES):
-            _, stats, _ = solve(prob, num_lanes=w, steps_per_round=64,
-                                bootstrap_rounds=3, bootstrap_steps=8)
+            stats = Solver(SolverConfig(
+                lanes=w, steps_per_round=64, bootstrap_rounds=3,
+                bootstrap_steps=8)).solve(prob).stats
             assert stats.best == serial_best, (name, w)
             base_r = base_r or stats.rounds
             rows.append({

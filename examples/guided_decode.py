@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import solve
 from repro.core.serial import PyNodeEval, PyProblem, serial_rb
 from repro.models import model as M
 from repro.models.config import ArchConfig

@@ -1,36 +1,37 @@
 """Quickstart: parallelize a recursive backtracking solver in ~20 lines.
 
 The paper's promise is that migrating SERIAL-RB to parallel needs almost
-no problem-specific code.  Here the full path: define a problem once
-(Vertex Cover on a random graph), check it against the serial oracle, then
-solve it with vectorized lanes + implicit heaviest-task load balancing.
+no problem-specific code.  Here the full front door (DESIGN.md §6): every
+problem family is one ``@register_problem`` entry, and a single Solver
+session drives both the serial oracle and the vectorized engine.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.distributed import solve
-from repro.core.serial import serial_rb
-from repro.problems import (gnp_graph, make_vertex_cover,
-                            make_vertex_cover_py)
+from repro import registry
+from repro.solver import Solver, SolverConfig
 
 
 def main() -> None:
-    graph = gnp_graph(24, 0.25, seed=42)
+    # One handle carries the engine form AND the serial-oracle form.
+    problem = registry.problem("vc", "gnp:24:25:42")
+    graph = problem.instance
     print(f"instance: G(n={graph.n}, m={graph.m})")
 
+    solver = Solver(SolverConfig(lanes=16, steps_per_round=64,
+                                 bootstrap_rounds=3, bootstrap_steps=8))
+
     # 1. The serial oracle (paper Fig. 1) — ground truth.
-    best, nodes, _ = serial_rb(make_vertex_cover_py(graph))
-    print(f"SERIAL-RB: optimum={best}, nodes={nodes}")
+    ref = solver.oracle(problem)
+    print(f"SERIAL-RB: optimum={ref.best}, nodes={ref.nodes}")
 
     # 2. The parallel engine: 16 vectorized lanes, steal rounds, implicit
     #    load balancing (no problem-specific knowledge, no task buffers).
-    cover, stats, _ = solve(make_vertex_cover(graph), num_lanes=16,
-                            steps_per_round=64, bootstrap_rounds=3,
-                            bootstrap_steps=8)
-    print(f"PARALLEL-RB (16 lanes): optimum={stats.best}, "
-          f"rounds={stats.rounds}, nodes={stats.nodes}, "
-          f"T_S={stats.t_s}, T_R={stats.t_r}")
-    assert stats.best == best
+    res = solver.solve(problem)
+    print(f"PARALLEL-RB (16 lanes): optimum={res.stats.best}, "
+          f"rounds={res.stats.rounds}, nodes={res.stats.nodes}, "
+          f"T_S={res.stats.t_s}, T_R={res.stats.t_r}")
+    assert res.stats.best == ref.best
     print("optimum matches the serial oracle — done.")
 
 

@@ -13,31 +13,34 @@ import os
 import tempfile
 import time
 
-from repro.core.distributed import solve
-from repro.problems import make_vertex_cover, random_regularish_graph
+from repro import registry
+from repro.solver import Solver, SolverConfig
 
 
 def main() -> None:
-    graph = random_regularish_graph(48, 4, seed=1)   # 60-cell analogue
-    prob = make_vertex_cover(graph)
+    problem = registry.problem("vc", "reg:48:4:1")   # 60-cell analogue
+    graph = problem.instance
     print(f"instance: 4-regular-ish n={graph.n} m={graph.m}")
 
     for lanes in (4, 16, 64):
         t0 = time.time()
-        _, stats, _ = solve(prob, num_lanes=lanes, steps_per_round=64,
-                            bootstrap_rounds=4, bootstrap_steps=8)
+        cfg = SolverConfig(lanes=lanes, steps_per_round=64,
+                           bootstrap_rounds=4, bootstrap_steps=8)
+        stats = Solver(cfg).solve(problem).stats
         print(f"lanes={lanes:3d} optimum={stats.best} rounds={stats.rounds}"
               f" nodes={stats.nodes} T_S={stats.t_s} T_R={stats.t_r}"
               f" wall={time.time()-t0:.1f}s")
 
     # Checkpoint / elastic restart: run 5 rounds at 16 lanes, checkpoint,
-    # then finish the search at 32 lanes from the persisted current_idx.
+    # then finish the search at 32 lanes from the persisted current_idx —
+    # the lane count is config, the checkpoint is elastic.
     path = os.path.join(tempfile.mkdtemp(), "solver.ckpt")
-    solve(prob, num_lanes=16, steps_per_round=64, max_rounds=5,
-          bootstrap_rounds=2, checkpoint_every=1, checkpoint_path=path)
+    Solver(SolverConfig(lanes=16, steps_per_round=64, max_rounds=5,
+                        bootstrap_rounds=2, checkpoint_every=1,
+                        checkpoint_path=path)).solve(problem)
     print(f"checkpointed 16-lane run -> {path}")
-    _, stats, _ = solve(prob, num_lanes=32, steps_per_round=64,
-                        resume_from=path)
+    stats = Solver(SolverConfig(lanes=32, steps_per_round=64,
+                                resume_from=path)).solve(problem).stats
     print(f"elastic restart at 32 lanes: optimum={stats.best} "
           f"(+{stats.rounds} rounds)")
 

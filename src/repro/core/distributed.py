@@ -25,15 +25,15 @@ Cross-device steal (deterministic, loss-free):
   5. psum-min of the incumbent; the round loop ends when the global number
      of active lanes and donatable tasks are both zero.
 
-The host driver (`solve`) runs jitted rounds in a Python loop so that
-checkpointing (paper §VII: persist ``current_idx``), elastic re-sharding and
-fault injection happen at round boundaries — the production posture for
-restartable long jobs.
+The host driver (``repro.solver.Solver.solve``) runs these jitted rounds in
+a Python loop so that checkpointing (paper §VII: persist ``current_idx``),
+elastic re-sharding and fault injection happen at round boundaries — the
+production posture for restartable long jobs.  The kwarg-style ``solve``
+kept here is a deprecated shim over that facade (DESIGN.md §6).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -44,7 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.compat import shard_map
 
-from repro.core.api import UNVISITED, INF_VALUE, BinaryProblem
+from repro.core.api import UNVISITED, BinaryProblem
 from repro.core import steal
 from repro.core.engine import Lanes, init_lanes, make_expand
 
@@ -230,88 +230,37 @@ def solve(problem: BinaryProblem,
           resume_from: Optional[str] = None,
           on_round: Optional[Callable[[int, Lanes, int], None]] = None,
           ) -> Tuple[Any, SolveStats, Lanes]:
-    """Host driver: run rounds until global termination.
+    """DEPRECATED kwarg entry point — use :class:`repro.solver.Solver`.
 
-    ``num_lanes`` is the per-device lane count.  With ``mesh=None`` the solve
-    is single-device (unit tests, benchmarks); with a mesh every device runs
-    ``num_lanes`` lanes and rounds are the shard_map'd collective version.
-
-    Bootstrap: a few short rounds (small R) ramp work distribution up the
-    same way the paper's GETPARENT topology floods initial tasks — without
-    it, every lane but lane 0 idles for a full round.
-
-    ``resume_from`` restores a checkpoint written by any earlier run at ANY
-    lane/device count (elastic restart, paper §VII): surplus tasks beyond
-    the new lane count wait in a host-side pool and are installed into idle
-    lanes at round boundaries.
+    Thin shim over ``Solver(SolverConfig(...)).solve(problem)`` (DESIGN.md
+    §6); the round loop is the facade's, so results are bitwise-identical
+    to the new API.  ``num_lanes`` is the per-device lane count
+    (``SolverConfig.lanes``); ``on_round`` maps onto the typed
+    :class:`repro.solver.ProgressEvent` stream ("round" events).
     """
-    from repro.core import checkpoint as ckpt
+    import warnings
 
-    if mesh is None:
-        round_fn = jax.jit(make_round(problem, steps_per_round))
-        boot_fn = (jax.jit(make_round(problem, bootstrap_steps))
-                   if bootstrap_rounds else None)
-        total_lanes = num_lanes
-    else:
-        n_dev = int(np.prod(mesh.devices.shape))
-        round_fn = make_distributed_round(problem, mesh, steps_per_round,
-                                          max_ship)
-        boot_fn = (make_distributed_round(problem, mesh, bootstrap_steps,
-                                          max_ship)
-                   if bootstrap_rounds else None)
-        total_lanes = num_lanes * n_dev
+    from repro.solver import ProgressEvent, Solver, SolverConfig
 
-    pool: list = []
-    if resume_from is not None:
-        lanes, pool = ckpt.restore(resume_from, problem, total_lanes)
-        bootstrap_rounds = max(bootstrap_rounds, 1)  # respread stolen work
-    else:
-        lanes = init_lanes(problem, total_lanes)
-    if mesh is not None:
-        lanes = _shard_lanes(lanes, mesh)
-
-    def feed_pool(lanes):
-        nonlocal pool
-        if pool:
-            lanes = _gather_lanes(lanes)
-            lanes, pool = ckpt.install_pending(problem, lanes, pool)
-            if mesh is not None:
-                lanes = _shard_lanes(lanes, mesh)
-        return lanes
-
-    rounds, done = 0, False
-    for _ in range(bootstrap_rounds):
-        lanes = feed_pool(lanes)
-        lanes, open_work = boot_fn(lanes) if boot_fn else round_fn(lanes)
-        rounds += 1
-        if int(jnp.sum(open_work)) == 0 and not pool:
-            done = True
-            break
-    while not done and rounds < max_rounds:
-        lanes = feed_pool(lanes)
-        lanes, open_work = round_fn(lanes)
-        rounds += 1
-        if on_round is not None:
-            on_round(rounds, lanes, int(jnp.sum(open_work)))
-        if checkpoint_every and checkpoint_path and rounds % checkpoint_every == 0:
-            ckpt.save(checkpoint_path, _gather_lanes(lanes))
-        if int(jnp.sum(open_work)) == 0 and not pool:
-            done = True
-
-    stats = SolveStats(
-        best=int(jnp.min(lanes.best)),
-        rounds=rounds,
-        nodes=int(jnp.sum(lanes.nodes)),
-        t_s=int(jnp.sum(lanes.t_s)),
-        t_r=int(jnp.sum(lanes.t_r)),
-        donated=int(jnp.sum(lanes.donated)),
-        lanes=int(lanes.active.shape[0]),
-    )
-    best_payload = jax.tree_util.tree_map(np.asarray, lanes.best_payload)
-    if problem.num_instances == 1:
-        # Single-instance API: drop the K=1 incumbent-table dim.
-        best_payload = jax.tree_util.tree_map(lambda p: p[0], best_payload)
-    return best_payload, stats, lanes
+    warnings.warn(
+        "repro.core.distributed.solve(...) is deprecated; use "
+        "repro.solver.Solver(SolverConfig(...)).solve(problem)",
+        DeprecationWarning, stacklevel=2)
+    if checkpoint_every and not checkpoint_path:
+        checkpoint_every = 0        # legacy behavior: silently no-op
+    config = SolverConfig(
+        lanes=num_lanes, steps_per_round=steps_per_round,
+        max_rounds=max_rounds, mesh=mesh, max_ship=max_ship,
+        bootstrap_rounds=bootstrap_rounds, bootstrap_steps=bootstrap_steps,
+        checkpoint_every=checkpoint_every, checkpoint_path=checkpoint_path,
+        resume_from=resume_from)
+    on_event = None
+    if on_round is not None:
+        def on_event(ev: ProgressEvent) -> None:
+            if ev.kind == "round":
+                on_round(ev.round, ev.lanes, ev.open_work)
+    result = Solver(config, on_event=on_event).solve(problem)
+    return result.payload, result.stats, result.lanes
 
 
 def _gather_lanes(lanes: Lanes) -> Lanes:

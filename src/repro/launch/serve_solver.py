@@ -4,13 +4,19 @@
       --instances vc:gnp:20:30:5,ds:gnp:16:30:7,vc:reg:24:4:1 \
       --lanes 32 --slots 4 [--backend pallas] [--ckpt svc.ckpt] [--resume]
 
-Each instance spec is ``<family>:<instance>`` where ``<family>`` is
-``vc`` | ``ds`` and ``<instance>`` follows ``repro.launch.solve`` syntax
+Each instance spec is ``<family>:<instance>`` where ``<family>`` is any
+*servable* registered problem family (``repro.registry``) and
+``<instance>`` uses that family's own registered parser
 (``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``, ``cell60``).
 ``--repeat R`` replays the whole mix R times (distinct request ids) to
 exercise continuous batching past the slot count.  ``--backend pallas``
 routes the shared stacked evaluate through the batched masked-popcount
 kernel (DESIGN.md §5.3) — results are bitwise-identical to jnp.
+
+The launcher contains zero per-family branching: admission rules live in
+the registry + ``SolverService.submit`` (typed ``AdmissionError``), and
+the service is built through the :class:`repro.solver.Solver` facade
+(DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -18,21 +24,32 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.launch.solve import parse_instance
+from repro import registry
 from repro.service import SolveRequest, SolverService
+from repro.solver import Solver, SolverConfig
 
 
 def parse_workload(spec: str, repeat: int):
-    """-> list of (family, Graph) over the comma-separated instance mix."""
+    """-> list of (family, instance) over the comma-separated mix."""
     out = []
-    for _ in range(repeat):
-        for item in spec.split(","):
-            family, _, inst = item.partition(":")
-            if family not in ("vc", "ds") or not inst:
-                raise SystemExit(
-                    f"bad instance spec {item!r}: want <vc|ds>:<instance>")
-            out.append((family, parse_instance(inst)))
-    return out
+    for item in spec.split(","):
+        family, _, inst = item.partition(":")
+        if not inst:
+            raise SystemExit(
+                f"bad instance spec {item!r}: want <family>:<instance>")
+        try:
+            pspec = registry.get(family)
+        except registry.UnknownProblemError as e:
+            raise SystemExit(f"bad instance spec {item!r}: {e}")
+        if not pspec.servable:
+            raise SystemExit(
+                f"bad instance spec {item!r}: family {family!r} is not "
+                f"servable (no service packing registered)")
+        try:
+            out.append((family, pspec.parse(inst)))
+        except ValueError as e:
+            raise SystemExit(f"bad instance spec {item!r}: {e}")
+    return out * repeat
 
 
 def main() -> None:
@@ -73,11 +90,11 @@ def main() -> None:
         reqs = [SolveRequest(rid=rid0 + i, graph=g, family=fam)
                 for i, (fam, g) in enumerate(workload)]
     else:
-        max_n = max(g.n for _, g in workload)
-        svc = SolverService(max_n=max_n, slots=args.slots,
-                            num_lanes=args.lanes,
-                            steps_per_round=args.steps_per_round,
-                            backend=args.backend)
+        max_n = max(registry.get(fam).size(g) for fam, g in workload)
+        config = SolverConfig(lanes=args.lanes,
+                              steps_per_round=args.steps_per_round,
+                              backend=args.backend)
+        svc = Solver(config).serve(max_n=max_n, slots=args.slots)
         reqs = [SolveRequest(rid=i, graph=g, family=fam)
                 for i, (fam, g) in enumerate(workload)]
     for r in reqs:

@@ -1,10 +1,15 @@
-"""Solver launcher: the paper's framework as a CLI.
+"""Solver launcher: the paper's framework as a CLI (registry-driven).
 
   PYTHONPATH=src python -m repro.launch.solve --problem vc \
       --instance reg:48:4:1 --lanes 32 [--ckpt run.ckpt] [--resume]
 
-Instances: ``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``,
-``cell60`` (the 4-regular analogue).  Problems: vc | ds.
+``--problem`` accepts any family registered with
+``repro.registry.register_problem`` and ``--instance`` uses that family's
+own registered parser (graph families: ``gnp:<n>:<p*100>:<seed>``,
+``reg:<n>:<k>:<seed>``, ``cell60``; subset sum: ``ss:<n>:<seed>``).  The
+CLI contains zero per-problem branching: parsing, capability validation
+and construction all come from the registry, and the solve itself runs
+through the :class:`repro.solver.Solver` facade (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -12,31 +17,26 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core.distributed import solve
-from repro.problems import (PROBLEM_FACTORIES, cell60_graph, gnp_graph,
-                            problem_backends, random_regularish_graph)
+from repro import registry
+from repro.problems.graphs import parse_graph_instance
+from repro.solver import Solver, SolverConfig
 
 
 def parse_instance(spec: str):
-    if spec == "cell60":
-        return cell60_graph()
-    kind, *rest = spec.split(":")
-    if kind == "gnp":
-        n, p100, seed = (int(x) for x in rest)
-        return gnp_graph(n, p100 / 100.0, seed=seed)
-    if kind == "reg":
-        n, k, seed = (int(x) for x in rest)
-        return random_regularish_graph(n, k, seed=seed)
-    raise SystemExit(f"unknown instance spec {spec}")
+    """DEPRECATED graph-spec parser, kept for pre-registry callers — use
+    ``repro.registry.get(family).parse`` (each family owns its grammar)."""
+    return parse_graph_instance(spec)
 
 
 def main() -> None:
+    families = registry.names()
     ap = argparse.ArgumentParser()
-    ap.add_argument("--problem", choices=sorted(PROBLEM_FACTORIES),
-                    default="vc")
-    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+    ap.add_argument("--problem", choices=sorted(families), default="vc",
+                    help="registered problem family: " + "; ".join(
+                        f"{n}: {registry.get(n).doc}" for n in families))
+    ap.add_argument("--backend", default="jnp",
                     help="node-evaluation kernel backend (validated against "
-                         "the problem factory's advertised capabilities)")
+                         "the family's registered capabilities)")
     ap.add_argument("--instance", default="reg:48:4:1")
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--steps-per-round", type=int, default=64)
@@ -45,25 +45,32 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    # Capability check is data, not per-problem branching: every factory
-    # advertises its kernel backends (DESIGN.md §5.4), so a problem gains
-    # --backend pallas the moment its factory does.
-    supported = problem_backends(args.problem)
-    if args.backend not in supported:
+    # Capability check is registry data, not per-problem branching
+    # (DESIGN.md §5.4/§6): a problem gains --backend pallas the moment its
+    # registration does.
+    spec = registry.get(args.problem)
+    if args.backend not in spec.backends:
         ap.error(
             f"--backend {args.backend} is not supported by --problem "
-            f"{args.problem} (factory advertises: {', '.join(supported)})")
+            f"{args.problem} (registry advertises: "
+            f"{', '.join(spec.backends)})")
+    try:
+        instance = spec.parse(args.instance)
+    except ValueError as e:
+        ap.error(str(e))
 
-    g = parse_instance(args.instance)
-    prob = PROBLEM_FACTORIES[args.problem](g, backend=args.backend)
-    print(f"{prob.name}: n={g.n} m={g.m} lanes={args.lanes}")
-    t0 = time.time()
-    payload, stats, _ = solve(
-        prob, num_lanes=args.lanes, steps_per_round=args.steps_per_round,
-        bootstrap_rounds=4, bootstrap_steps=8,
+    config = SolverConfig(
+        lanes=args.lanes, steps_per_round=args.steps_per_round,
+        backend=args.backend, bootstrap_rounds=4, bootstrap_steps=8,
         checkpoint_every=args.ckpt_every if args.ckpt else 0,
         checkpoint_path=args.ckpt,
         resume_from=args.ckpt if args.resume else None)
+    handle = registry.problem(args.problem, instance)
+    print(f"{args.problem}[{spec.label(instance)}]: lanes={args.lanes} "
+          f"backend={args.backend}")
+    t0 = time.time()
+    result = Solver(config).solve(handle)
+    stats = result.stats
     print(f"optimum={stats.best} rounds={stats.rounds} nodes={stats.nodes} "
           f"T_S={stats.t_s} T_R={stats.t_r} wall={time.time()-t0:.1f}s")
 

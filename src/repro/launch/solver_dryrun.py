@@ -24,21 +24,25 @@ import json
 import jax
 import numpy as np
 
-from repro.core.distributed import make_distributed_round, _lanes_proto
+from repro import registry
+from repro.core.distributed import make_distributed_round
 from repro.core.engine import init_lanes
 from repro.launch.dryrun import ARTIFACT_DIR
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)
-from repro.problems import make_vertex_cover, random_regularish_graph
 from repro.roofline import analyze_hlo
 
 
 def run(multi_pod: bool, lanes_per_device: int = 8,
-        steps_per_round: int = 256, n_vertices: int = 512):
+        steps_per_round: int = 256, problem: str = "vc",
+        instance: str = "reg:512:4:1"):
+    """Lower one distributed round of any registered problem family over
+    the production mesh (registry-driven — no per-problem code here)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = int(np.prod(mesh.devices.shape))
-    g = random_regularish_graph(n_vertices, 4, seed=1)
-    prob = make_vertex_cover(g)
+    spec = registry.get(problem)
+    g = spec.parse(instance)
+    prob = spec.build(g)
 
     fn = make_distributed_round(prob, mesh, steps_per_round, max_ship=16)
     lanes = init_lanes(prob, lanes_per_device * n_dev, seed_root=False)
@@ -55,7 +59,8 @@ def run(multi_pod: bool, lanes_per_device: int = 8,
         "devices": n_dev,
         "lanes_total": lanes_per_device * n_dev,
         "steps_per_round": steps_per_round,
-        "instance": f"reg_{n_vertices}_4",
+        "problem": problem,
+        "instance": spec.label(g),
         "peak_bytes": int(mem.argument_size_in_bytes
                           + mem.temp_size_in_bytes
                           + mem.output_size_in_bytes
@@ -80,12 +85,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both", action="store_true")
+    ap.add_argument("--problem", default="vc",
+                    help="registered problem family (repro.registry)")
+    ap.add_argument("--instance", default="reg:512:4:1")
     args = ap.parse_args()
     if args.both:
-        run(False)
-        run(True)
+        run(False, problem=args.problem, instance=args.instance)
+        run(True, problem=args.problem, instance=args.instance)
     else:
-        run(args.multi_pod)
+        run(args.multi_pod, problem=args.problem, instance=args.instance)
 
 
 if __name__ == "__main__":

@@ -9,11 +9,21 @@ Each problem is exposed in two exactly-equivalent forms:
 
 Equivalence (identical search trees node-for-node) is what the paper's
 determinism requirement demands and is asserted by tests.
+
+Every family self-registers with :mod:`repro.registry` via ONE
+``@register_problem`` call in its own module — factory, serial oracle,
+instance parser, kernel-backend capabilities and (for graph families)
+service packing.  Launchers, the service driver and the
+:class:`repro.solver.Solver` facade resolve problems exclusively through
+that registry (DESIGN.md §6); the ``PROBLEM_FACTORIES`` /
+``problem_backends`` names below are deprecated registry views kept for
+pre-registry callers.
 """
 
+from repro import registry as _registry
 from repro.problems.graphs import (  # noqa: F401
     Graph, gnp_graph, circulant_graph, cell60_graph, pack_adjacency,
-    random_regularish_graph,
+    parse_graph_instance, random_regularish_graph,
 )
 from repro.problems.vertex_cover import (  # noqa: F401
     make_degree_stats_fn, make_vertex_cover, make_vertex_cover_callbacks,
@@ -22,18 +32,16 @@ from repro.problems.vertex_cover import (  # noqa: F401
 from repro.problems.dominating_set import (  # noqa: F401
     make_domination_stats_fn, make_dominating_set, make_dominating_set_py,
 )
-from repro.problems.subset_sum import make_subset_sum, make_subset_sum_py  # noqa: F401
+from repro.problems.subset_sum import (  # noqa: F401
+    SSInstance, make_subset_sum, make_subset_sum_py, parse_ss_instance,
+)
 
-#: CLI-facing graph-problem factories (``launch/solve.py``).  Each factory
-#: advertises the kernel backends it accepts via a ``backends`` attribute
-#: (DESIGN.md §5.4) — the launchers validate --backend against it instead
-#: of hard-coding per-problem knowledge.
-PROBLEM_FACTORIES = {
-    "vc": make_vertex_cover,
-    "ds": make_dominating_set,
-}
+#: DEPRECATED registry view — use ``repro.registry.get(name).factory``.
+#: Populated from the registry so the two can never diverge.
+PROBLEM_FACTORIES = {name: _registry.get(name).factory
+                     for name in _registry.names()}
 
 
 def problem_backends(name: str) -> tuple:
-    """Kernel backends supported by registered problem ``name``."""
-    return tuple(getattr(PROBLEM_FACTORIES[name], "backends", ("jnp",)))
+    """DEPRECATED — use ``repro.registry.problem_backends(name)``."""
+    return _registry.problem_backends(name)

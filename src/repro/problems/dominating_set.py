@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.core.api import INF_VALUE, BinaryProblem, NodeEval
 from repro.core.serial import INF, PyNodeEval, PyProblem
-from repro.problems.graphs import Graph, bit, full_mask
+from repro.problems.graphs import Graph, bit, full_mask, parse_graph_instance
+from repro.registry import register_problem
 
 
 class DSState(NamedTuple):
@@ -109,6 +110,22 @@ def make_domination_stats_fn(graph: Graph, backend: str = "jnp", *,
     return stats
 
 
+def _pack_ds(graph: Graph, n: int):
+    """Service packing: pad into a stacked FAMILY_DS slot (closed adjacency;
+    lazy import keeps problems <-> service acyclic)."""
+    from repro.service.batch_problem import FAMILY_DS, pack_instance
+    return pack_instance(graph, FAMILY_DS, n)
+
+
+@register_problem(
+    "ds",
+    parse=parse_graph_instance,
+    oracle=lambda graph: make_dominating_set_py(graph),
+    backends=("jnp", "pallas"),
+    pack=_pack_ds,
+    family_id=1,                       # batch_problem.FAMILY_DS
+    doc="minimum dominating set via set-cover branching (paper §V)",
+)
 def make_dominating_set(graph: Graph, backend: str = "jnp", *,
                         tile: int = 128, interpret: Optional[bool] = None,
                         stats_fn: Optional[DomStatsFn] = None
@@ -160,11 +177,6 @@ def make_dominating_set(graph: Graph, backend: str = "jnp", *,
     return BinaryProblem(
         name=f"ds[{graph.name}]", max_depth=n, root=root, evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32))
-
-
-#: Kernel backends the factory accepts — the capability surface consumed
-#: by ``launch/solve.py``'s --backend check.
-make_dominating_set.backends = ("jnp", "pallas")
 
 
 def make_dominating_set_py(graph: Graph) -> PyProblem:

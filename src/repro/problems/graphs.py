@@ -119,6 +119,31 @@ def cell60_graph(n: int = 300) -> Graph:
     return circulant_graph(n, (1, 7), name="60cell-analogue")
 
 
+def parse_graph_instance(spec: str) -> Graph:
+    """Parse the graph-problem instance-spec grammar shared by every graph
+    family's registry entry (moved out of ``launch/solve.py``):
+
+      ``gnp:<n>:<p*100>:<seed>`` — Erdős–Rényi G(n, p);
+      ``reg:<n>:<k>:<seed>``     — random k-regular-ish graph;
+      ``cell60``                 — the 4-regular 60-cell analogue.
+    """
+    if spec == "cell60":
+        return cell60_graph()
+    kind, *rest = spec.split(":")
+    try:
+        if kind == "gnp":
+            n, p100, seed = (int(x) for x in rest)
+            return gnp_graph(n, p100 / 100.0, seed=seed)
+        if kind == "reg":
+            n, k, seed = (int(x) for x in rest)
+            return random_regularish_graph(n, k, seed=seed)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"bad {kind} instance spec {spec!r}: {e}") from None
+    raise ValueError(
+        f"unknown instance spec {spec!r} (want gnp:<n>:<p*100>:<seed>, "
+        f"reg:<n>:<k>:<seed> or cell60)")
+
+
 def random_regularish_graph(n: int, k: int, seed: int, name: str = "") -> Graph:
     """k-regular-ish graph via random perfect matchings (union of k)."""
     rng = np.random.RandomState(seed)

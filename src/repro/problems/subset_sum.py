@@ -13,13 +13,52 @@ which makes this the minimal example of the protocol.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import INF_VALUE, BinaryProblem, NodeEval
 from repro.core.serial import INF, PyNodeEval, PyProblem
+from repro.registry import register_problem
+
+
+class SSInstance(NamedTuple):
+    """A subset-sum instance: positive item values + an exact target.
+
+    ``n`` and ``name`` mirror the :class:`~repro.problems.graphs.Graph`
+    conventions so registry-driven launchers stay problem-oblivious.
+    """
+
+    values: Tuple[int, ...]
+    target: int
+    name: str = "ss"
+
+    @property
+    def n(self) -> int:
+        return len(self.values)
+
+
+def parse_ss_instance(spec: str) -> SSInstance:
+    """Parse ``ss:<n>:<seed>``: ``n`` seeded random values in [1, 50) with a
+    target drawn as the sum of a random (non-empty) subset, so every
+    generated instance is feasible and the optimum is non-trivial.
+    """
+    kind, *rest = spec.split(":")
+    if kind != "ss" or len(rest) != 2:
+        raise ValueError(
+            f"unknown instance spec {spec!r} (want ss:<n>:<seed>)")
+    n, seed = (int(x) for x in rest)
+    if n < 1:
+        raise ValueError(f"bad subset-sum size in {spec!r}")
+    rng = np.random.RandomState(seed)
+    values = rng.randint(1, 50, size=n)
+    chosen = rng.rand(n) < 0.4
+    if not chosen.any():
+        chosen[int(rng.randint(n))] = True
+    target = int(values[chosen].sum())
+    return SSInstance(values=tuple(int(v) for v in values), target=target,
+                      name=f"ss_{n}_{seed}")
 
 
 class SSState(NamedTuple):
@@ -29,6 +68,18 @@ class SSState(NamedTuple):
     mask: jnp.ndarray     # int32[n] — 1 where taken (solution payload)
 
 
+@register_problem(
+    "ss",
+    parse=parse_ss_instance,
+    oracle=lambda inst: make_subset_sum_py(inst.values, inst.target),
+    # No bitset table to stream — nothing for the kernel layer to fuse, so
+    # the family advertises the jnp backend only (DESIGN.md §5.4).  No
+    # ``pack``: the stacked service tables are graph-shaped, so subset sum
+    # is not servable (submit() raises AdmissionError).
+    backends=("jnp",),
+    build=lambda inst, backend: make_subset_sum(inst.values, inst.target),
+    doc="minimum-cardinality exact subset sum (non-graph family)",
+)
 def make_subset_sum(values, target: int) -> BinaryProblem:
     vals = jnp.asarray(np.asarray(values, dtype=np.int32))
     n = int(vals.shape[0])
@@ -64,11 +115,6 @@ def make_subset_sum(values, target: int) -> BinaryProblem:
         name=f"subset_sum[n={n}]", max_depth=n, root=root,
         evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(n, jnp.int32))
-
-
-#: No bitset table to stream — nothing for the kernel layer to fuse, so the
-#: factory advertises the jnp backend only (DESIGN.md §5.4).
-make_subset_sum.backends = ("jnp",)
 
 
 def make_subset_sum_py(values, target: int) -> PyProblem:

@@ -43,7 +43,8 @@ import numpy as np
 
 from repro.core.api import BinaryProblem, NodeEval
 from repro.core.serial import PyNodeEval, PyProblem
-from repro.problems.graphs import Graph, full_mask
+from repro.problems.graphs import Graph, full_mask, parse_graph_instance
+from repro.registry import register_problem
 
 
 class VCState(NamedTuple):
@@ -105,6 +106,22 @@ def make_degree_stats_fn(graph: Graph, backend: str = "jnp", *,
     return stats
 
 
+def _pack_vc(graph: Graph, n: int):
+    """Service packing: pad into a stacked FAMILY_VC slot (lazy import keeps
+    problems <-> service acyclic)."""
+    from repro.service.batch_problem import FAMILY_VC, pack_instance
+    return pack_instance(graph, FAMILY_VC, n)
+
+
+@register_problem(
+    "vc",
+    parse=parse_graph_instance,
+    oracle=lambda graph: make_vertex_cover_py(graph),
+    backends=("jnp", "pallas"),
+    pack=_pack_vc,
+    family_id=0,                       # batch_problem.FAMILY_VC
+    doc="minimum vertex cover by max-degree branching (paper §V)",
+)
 def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
                       tile: int = 128, interpret: Optional[bool] = None,
                       stats_fn: Optional[StatsFn] = None) -> BinaryProblem:
@@ -165,11 +182,6 @@ def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
         evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32),
     )
-
-
-#: Kernel backends the factory accepts — the capability surface consumed
-#: by ``launch/solve.py``'s --backend check.
-make_vertex_cover.backends = ("jnp", "pallas")
 
 
 def make_vertex_cover_callbacks(graph: Graph, *,

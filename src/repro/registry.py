@@ -1,0 +1,212 @@
+"""ProblemSpec registry — the single registration point for problem families.
+
+The paper's core claim is *ease of use*: "transforming almost any recursive
+backtracking algorithm into a parallel one" should be a registration, not a
+plumbing project.  Before this module existed, adding a problem meant
+touching a factory table in ``repro.problems``, the service's hard-coded
+family names, a ``make_*_py`` naming convention and per-CLI instance
+parsing.  Now a family is ONE call::
+
+    @register_problem(
+        "vc",
+        parse=parse_graph_instance,            # "reg:48:4:1" -> Graph
+        oracle=lambda g: make_vertex_cover_py(g),
+        backends=("jnp", "pallas"),            # kernel capabilities
+        pack=_pack_vc, family_id=FAMILY_VC,    # optional: service admission
+    )
+    def make_vertex_cover(graph, backend="jnp", ...):
+        ...
+
+which binds, per family name:
+
+  * the engine factory (jnp :class:`~repro.core.api.BinaryProblem`, with its
+    advertised kernel-backend capabilities — DESIGN.md §5.4);
+  * the serial ``PyProblem`` oracle factory (ground-truth parity);
+  * the instance-spec parser consumed by every launcher;
+  * optionally, service packing (``pack(instance, n) -> (adj, fullm,
+    family)`` plus the stacked-table family id) — registering these makes
+    the family admissible to the multi-tenant :class:`SolverService`.
+
+Every launcher (``repro.launch.solve`` / ``serve_solver`` /
+``solver_dryrun``), the service driver and the :class:`repro.solver.Solver`
+facade resolve problems exclusively through this registry, so they contain
+zero per-problem branching or name tables (DESIGN.md §6).
+
+Built-in families register themselves when ``repro.problems`` is imported;
+lookups trigger that import lazily, so ``repro.registry`` itself stays
+import-cycle-free and cheap to import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "ProblemHandle",
+    "ProblemSpec",
+    "UnknownProblemError",
+    "get",
+    "names",
+    "problem",
+    "problem_backends",
+    "register_problem",
+]
+
+
+class UnknownProblemError(KeyError):
+    """Lookup of a problem family that was never registered."""
+
+
+_REGISTRY: Dict[str, "ProblemSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """Everything the framework needs to know about one problem family.
+
+    Attributes:
+      name: registry key (also the launchers' ``--problem`` /
+        ``SolveRequest.family`` value).
+      factory: the engine-problem factory as registered (kept for direct,
+        keyword-rich use; launchers go through :meth:`build`).
+      builder: ``(instance, backend) -> BinaryProblem`` — the normalized
+        construction path used by :meth:`build`.
+      oracle: ``instance -> PyProblem`` — the serial reference factory.
+      parse: ``instance-spec str -> instance`` — the family's CLI parser.
+      backends: kernel backends the factory accepts (DESIGN.md §5.4); the
+        capability surface validated by CLIs and :class:`repro.solver.Solver`.
+      family_id: stacked-table family id (``repro.service.batch_problem``)
+        when the family is servable, else None.
+      pack: ``(instance, n) -> (adj, fullm, family)`` service packing, or
+        None when the family cannot ride the stacked tables.
+      size: ``instance -> int`` — instance size used for service admission
+        (defaults to ``instance.n``).
+      doc: one-line description shown in CLI help.
+    """
+
+    name: str
+    factory: Callable[..., Any]
+    builder: Callable[[Any, str], Any]
+    oracle: Callable[[Any], Any]
+    parse: Callable[[str], Any]
+    backends: Tuple[str, ...] = ("jnp",)
+    family_id: Optional[int] = None
+    pack: Optional[Callable[[Any, int], Any]] = None
+    size: Callable[[Any], int] = lambda instance: int(instance.n)
+    doc: str = ""
+
+    @property
+    def servable(self) -> bool:
+        """True when the family can be admitted to the solver service."""
+        return self.pack is not None and self.family_id is not None
+
+    def build(self, instance: Any, backend: str = "jnp") -> Any:
+        """Build the engine ``BinaryProblem``, validating ``backend``."""
+        if backend not in self.backends:
+            raise ValueError(
+                f"problem {self.name!r} does not support backend "
+                f"{backend!r} (advertises: {', '.join(self.backends)})")
+        return self.builder(instance, backend)
+
+    def label(self, instance: Any) -> str:
+        """Human-readable instance label for logs."""
+        return str(getattr(instance, "name", instance))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemHandle:
+    """A (family, instance) pair — the facade's unit of work.
+
+    Produced by :func:`problem`; consumed by
+    :meth:`repro.solver.Solver.solve` / ``.oracle`` so one object carries
+    both the engine form and the serial-oracle form of the same instance.
+    """
+
+    spec: ProblemSpec
+    instance: Any
+
+    def build(self, backend: str = "jnp") -> Any:
+        return self.spec.build(self.instance, backend)
+
+    def oracle(self) -> Any:
+        return self.spec.oracle(self.instance)
+
+    @property
+    def label(self) -> str:
+        return f"{self.spec.name}:{self.spec.label(self.instance)}"
+
+
+def register_problem(name: str, *, parse: Callable[[str], Any],
+                     oracle: Callable[[Any], Any],
+                     backends: Tuple[str, ...] = ("jnp",),
+                     build: Optional[Callable[..., Any]] = None,
+                     pack: Optional[Callable[[Any, int], Any]] = None,
+                     family_id: Optional[int] = None,
+                     size: Optional[Callable[[Any], int]] = None,
+                     doc: str = ""):
+    """Decorator: register the decorated engine factory as family ``name``.
+
+    ``build`` overrides how an instance + backend reach the factory (the
+    default calls ``factory(instance, backend=backend)``, which fits every
+    graph problem).  The decorator also stamps ``factory.backends`` so the
+    pre-registry capability attribute (DESIGN.md §5.4) keeps working.
+    """
+
+    def deco(factory):
+        if name in _REGISTRY:
+            raise ValueError(f"problem {name!r} registered twice")
+        builder = build or (
+            lambda instance, backend: factory(instance, backend=backend))
+        kwargs: Dict[str, Any] = {}
+        if size is not None:
+            kwargs["size"] = size
+        _REGISTRY[name] = ProblemSpec(
+            name=name, factory=factory, builder=builder, oracle=oracle,
+            parse=parse, backends=tuple(backends), family_id=family_id,
+            pack=pack, doc=doc, **kwargs)
+        factory.backends = tuple(backends)
+        return factory
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    # Built-in families live in repro.problems and self-register on import;
+    # importing lazily here keeps registry <-> problems acyclic.
+    import repro.problems  # noqa: F401
+
+
+def get(name: str) -> ProblemSpec:
+    """Registered spec for family ``name`` (raises UnknownProblemError)."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownProblemError(
+            f"unknown problem family {name!r} (registered: "
+            f"{', '.join(sorted(_REGISTRY))})") from None
+
+
+def names() -> Tuple[str, ...]:
+    """All registered family names, sorted."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def problem_backends(name: str) -> Tuple[str, ...]:
+    """Kernel backends supported by registered family ``name``."""
+    return get(name).backends
+
+
+def problem(name: str, instance: Any) -> ProblemHandle:
+    """Resolve (family, instance) into a :class:`ProblemHandle`.
+
+    ``instance`` may be the family's native instance object (e.g. a
+    :class:`~repro.problems.graphs.Graph`) or an instance-spec string,
+    which is parsed with the family's registered parser.
+    """
+    spec = get(name)
+    if isinstance(instance, str):
+        instance = spec.parse(instance)
+    return ProblemHandle(spec=spec, instance=instance)

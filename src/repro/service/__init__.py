@@ -7,11 +7,14 @@ admission, instance-scoped stealing, per-instance retirement and elastic
 checkpointing.
 """
 
-from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC, StackedSpec,
+from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC,
+                                         STACKED_BACKENDS, StackedSpec,
                                          StackedTables, SvcState)
-from repro.service.driver import SolveRequest, SolverService
+from repro.service.driver import (AdmissionError, SolveRequest,
+                                  SolverService)
 
 __all__ = [
-    "FAMILY_DS", "FAMILY_VC", "StackedSpec", "StackedTables", "SvcState",
-    "SolveRequest", "SolverService",
+    "AdmissionError", "FAMILY_DS", "FAMILY_VC", "STACKED_BACKENDS",
+    "StackedSpec", "StackedTables", "SvcState", "SolveRequest",
+    "SolverService",
 ]

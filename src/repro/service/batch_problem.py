@@ -57,6 +57,10 @@ from repro.problems.graphs import Graph, full_mask, num_words
 FAMILY_VC = 0
 FAMILY_DS = 1
 
+#: Kernel backends the stacked shared-evaluate accepts (``StackedSpec.bind``)
+#: — the service-side capability surface (DESIGN.md §5.3/§6).
+STACKED_BACKENDS = ("jnp", "pallas")
+
 
 class StackedTables(NamedTuple):
     """Per-slot instance data (leaves are device arrays inside the jit)."""

@@ -8,11 +8,15 @@ ticks, admission/retirement at tick boundaries) applied to backtracking:
   * a *slot* is one of K stacked-instance table entries
     (``batch_problem.StackedSpec``); a request occupies a slot from
     admission to retirement;
-  * *admission* writes the padded instance into the stacked tables (they
-    are jit ARGUMENTS, so no recompilation), resets the slot's incumbent
-    and seeds the instance root onto one idle lane — every other lane the
-    instance ever uses arrives via stealing, the same bootstrap the paper
-    uses for its virtual topology;
+  * *admission* resolves the request's family through the
+    :mod:`repro.registry` (any registered family with service packing is
+    admissible — no name table here; invalid requests raise a typed
+    :class:`AdmissionError` at ``submit()`` time) and writes the padded
+    instance into the stacked tables (they are jit ARGUMENTS, so no
+    recompilation), resets the slot's incumbent and seeds the instance
+    root onto one idle lane — every other lane the instance ever uses
+    arrives via stealing, the same bootstrap the paper uses for its
+    virtual topology;
   * *retirement* fires when the per-instance open-work counter reaches
     zero: the slot's optimum + payload are recorded and the slot is free
     for the next queued request.
@@ -37,27 +41,33 @@ backend is an execution choice like the lane count, not checkpoint state.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.core import checkpoint as ckpt
 from repro.core.api import INF_VALUE, UNVISITED
 from repro.core.distributed import make_round
 from repro.core.engine import NO_INSTANCE, init_lanes
 from repro.problems.graphs import Graph
-from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC, StackedSpec,
-                                         StackedTables, pack_instance)
+from repro.service.batch_problem import StackedSpec, StackedTables
 
-_FAMILY_NAMES = {"vc": FAMILY_VC, "ds": FAMILY_DS}
+
+class AdmissionError(ValueError):
+    """A request the service can never run: unregistered family, family
+    without service packing, or instance larger than the deployment's
+    ``max_n``.  Raised at ``submit()`` time — never deep inside packing."""
 
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One tenant's instance.  ``family`` is "vc" | "ds"."""
+    """One tenant's instance.  ``family`` is any *servable* registered
+    problem family (``repro.registry.get(family).servable``)."""
 
     rid: int
     graph: Graph
@@ -74,14 +84,47 @@ class RequestResult:
 
 
 class SolverService:
-    """Fixed pool of W lanes continuously batched over streamed requests."""
+    """Fixed pool of W lanes continuously batched over streamed requests.
+
+    Construct through :meth:`repro.solver.Solver.serve` (or
+    :meth:`from_config`); direct ``SolverService(...)`` construction is the
+    deprecated pre-facade surface and emits ``DeprecationWarning``.
+    """
 
     def __init__(self, *, max_n: int, slots: int, num_lanes: int,
                  steps_per_round: int = 64, backend: str = "jnp"):
+        warnings.warn(
+            "direct SolverService(...) construction is deprecated; use "
+            "repro.solver.Solver(SolverConfig(...)).serve(max_n=..., "
+            "slots=...)", DeprecationWarning, stacklevel=2)
+        self._init(max_n=max_n, slots=slots, num_lanes=num_lanes,
+                   steps_per_round=steps_per_round, backend=backend)
+
+    @classmethod
+    def from_config(cls, config, *, max_n: int, slots: int,
+                    on_event: Optional[Callable[[Any], None]] = None
+                    ) -> "SolverService":
+        """The facade constructor: lanes / steps_per_round / backend come
+        from a :class:`repro.solver.SolverConfig`."""
+        return cls._create(max_n=max_n, slots=slots,
+                           num_lanes=config.lanes,
+                           steps_per_round=config.steps_per_round,
+                           backend=config.backend, on_event=on_event)
+
+    @classmethod
+    def _create(cls, **kwargs) -> "SolverService":
+        svc = object.__new__(cls)
+        svc._init(**kwargs)
+        return svc
+
+    def _init(self, *, max_n: int, slots: int, num_lanes: int,
+              steps_per_round: int = 64, backend: str = "jnp",
+              on_event: Optional[Callable[[Any], None]] = None):
         self.spec = StackedSpec(n=max_n, k=slots)
         self.num_lanes = num_lanes
         self.steps_per_round = steps_per_round
         self.backend = backend                # shared-evaluate kernel backend
+        self.on_event = on_event              # ProgressEvent stream (§6)
         self.tables = self.spec.empty_tables()           # host numpy
         self._tables_dev: Optional[StackedTables] = None
 
@@ -123,14 +166,34 @@ class SolverService:
     # -- admission / lane placement ----------------------------------------
 
     def submit(self, request: SolveRequest) -> int:
-        if request.family not in _FAMILY_NAMES:
-            raise ValueError(f"unknown family {request.family!r}")
-        if request.graph.n > self.spec.n:
-            raise ValueError(
-                f"request n={request.graph.n} exceeds service max_n="
-                f"{self.spec.n}")
+        """Queue a request after full admission validation.
+
+        Any registered family with service packing is admissible — there is
+        no per-family name table here; new families become servable the
+        moment their ``@register_problem`` call supplies ``pack`` +
+        ``family_id``.  Raises :class:`AdmissionError` (never a deep
+        packing failure) for anything the service can never run.
+        """
+        try:
+            spec = registry.get(request.family)
+        except registry.UnknownProblemError as e:
+            raise AdmissionError(str(e)) from None
+        if not spec.servable:
+            raise AdmissionError(
+                f"problem family {request.family!r} is registered but not "
+                f"servable (no service packing in its @register_problem "
+                f"call)")
+        n = spec.size(request.graph)
+        if n > self.spec.n:
+            raise AdmissionError(
+                f"request n={n} exceeds service max_n={self.spec.n}")
         self.queue.append(request)
         return request.rid
+
+    def _emit(self, kind: str, **kw) -> None:
+        if self.on_event is not None:
+            from repro.solver import ProgressEvent
+            self.on_event(ProgressEvent(kind=kind, round=self.rounds, **kw))
 
     def _host_lane_fields(self):
         l = self.lanes
@@ -188,8 +251,10 @@ class SolverService:
             req = self.queue.popleft()
             slot = free.pop(0)
             lane = idle.pop(0)
-            adj, fm, fam = pack_instance(
-                req.graph, _FAMILY_NAMES[req.family], self.spec.n)
+            # Family-oblivious packing: the registered spec carries the
+            # stacked-table encoding (family id included in its return).
+            adj, fm, fam = registry.get(req.family).pack(req.graph,
+                                                         self.spec.n)
             self.tables.adj[slot] = adj
             self.tables.fullm[slot] = fm
             self.tables.family[slot] = fam
@@ -208,6 +273,7 @@ class SolverService:
             h["inst"][lane], h["active"][lane] = slot, True
             h["t_s"][lane] += 1
             changed = True
+            self._emit("admit", rid=req.rid)
 
         # Retarget remaining idle lanes round-robin over live slots so the
         # next steal round can feed them (instance-scoped thieves).
@@ -254,6 +320,7 @@ class SolverService:
                 payload=payload,
                 admitted_round=self.slot_admitted[slot],
                 retired_round=self.rounds)
+            self._emit("retire", rid=rid, best=self.results[rid].optimum)
             self.slot_rid[slot] = -1
             # Unbind the retired slot's (now idle) lanes.
             if h_inst is None:
@@ -275,6 +342,7 @@ class SolverService:
         self.lanes = lanes
         self.rounds += 1
         open_np = np.asarray(open_vec)
+        self._emit("round", open_work=int(open_np.sum()))
         self._retire(open_np)
         return open_np
 
@@ -331,8 +399,8 @@ class SolverService:
         """
         extra = ckpt.read_extra(path)
         n, k = (int(x) for x in extra["spec"])
-        svc = cls(max_n=n, slots=k, num_lanes=num_lanes,
-                  steps_per_round=steps_per_round, backend=backend)
+        svc = cls._create(max_n=n, slots=k, num_lanes=num_lanes,
+                          steps_per_round=steps_per_round, backend=backend)
         svc.tables = StackedTables(
             adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
             family=extra["family"].copy())

@@ -1,0 +1,349 @@
+"""The Solver session API — one front door for serial, distributed and
+service solves.
+
+The paper's framework has three execution paths (a serial oracle, the
+distributed BSP engine, and the multi-tenant solver service) which used to
+be driven by three divergent call surfaces: a 12-kwarg
+``core.distributed.solve``, a ``SolverService.__init__`` with its own
+kwargs, and hand-rolled ``serial_rb`` calls.  This module replaces all
+three with one session object (DESIGN.md §6)::
+
+    cfg = SolverConfig(lanes=64, steps_per_round=64, backend="pallas")
+    solver = Solver(cfg)
+
+    res = solver.solve(registry.problem("vc", "reg:48:4:1"))   # distributed
+    ref = solver.oracle(registry.problem("vc", "reg:48:4:1"))  # serial
+    svc = solver.serve(max_n=32, slots=4)                      # service
+    assert res.stats.best == ref.best
+
+``SolverConfig`` is frozen and validated at construction; problem-dependent
+checks (kernel-backend capabilities, checkpoint compatibility) happen when
+the config first meets a problem.  Progress reporting is a typed
+:class:`ProgressEvent` stream (``on_event``) shared by the distributed
+driver and the service driver — the generalization of the old ``on_round``
+callback.
+
+The legacy entry points (``repro.core.distributed.solve(...)`` kwargs and
+direct ``SolverService(...)`` construction) remain as thin shims over this
+module and emit ``DeprecationWarning``; results are bitwise-identical
+because both run the exact same round loop below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import registry as _registry
+from repro.core.api import BinaryProblem
+from repro.core.distributed import (SolveStats, _gather_lanes, _shard_lanes,
+                                    make_distributed_round, make_round)
+from repro.core.engine import Lanes, init_lanes
+from repro.core.serial import serial_rb
+
+__all__ = [
+    "ConfigError",
+    "OracleResult",
+    "ProgressEvent",
+    "SolveResult",
+    "Solver",
+    "SolverConfig",
+    "SolveStats",
+]
+
+
+class ConfigError(ValueError):
+    """An invalid :class:`SolverConfig`, or one incompatible with the
+    problem it is being applied to."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Frozen execution policy for a solver session.
+
+    Attributes:
+      lanes: engine lanes per device (total lanes = lanes × #devices).
+      steps_per_round: engine steps between steal/collective phases (R).
+      max_rounds: hard round budget before the drive aborts.
+      mesh: device mesh for the distributed round, or None (single device).
+      max_ship: cross-device tasks shipped per device per round.
+      bootstrap_rounds / bootstrap_steps: short ramp-up rounds that flood
+        initial tasks (the paper's GETPARENT topology analogue).
+      backend: node-evaluation kernel backend ("jnp" | "pallas"), validated
+        against the problem family's registered capabilities at build time.
+      checkpoint_every / checkpoint_path: periodic checkpointing policy
+        (``checkpoint_every > 0`` requires a path).
+      resume_from: checkpoint to restore before solving (elastic: any lane
+        count; the instance-slot count must match the problem).
+    """
+
+    lanes: int = 32
+    steps_per_round: int = 64
+    max_rounds: int = 100000
+    mesh: Optional[Mesh] = None
+    max_ship: int = 16
+    bootstrap_rounds: int = 0
+    bootstrap_steps: int = 8
+    backend: str = "jnp"
+    checkpoint_every: int = 0
+    checkpoint_path: Optional[str] = None
+    resume_from: Optional[str] = None
+
+    def __post_init__(self):
+        if self.lanes < 1:
+            raise ConfigError(f"lanes must be >= 1, got {self.lanes}")
+        if self.steps_per_round < 1:
+            raise ConfigError(
+                f"steps_per_round must be >= 1, got {self.steps_per_round}")
+        if self.max_ship < 1:
+            raise ConfigError(f"max_ship must be >= 1, got {self.max_ship}")
+        if self.bootstrap_rounds < 0 or self.bootstrap_steps < 1:
+            raise ConfigError(
+                f"bad bootstrap policy: rounds={self.bootstrap_rounds} "
+                f"steps={self.bootstrap_steps}")
+        if self.checkpoint_every < 0:
+            raise ConfigError(
+                f"checkpoint_every must be >= 0, got {self.checkpoint_every}")
+        if self.checkpoint_every and not self.checkpoint_path:
+            raise ConfigError(
+                "checkpoint_every > 0 requires checkpoint_path")
+        if not isinstance(self.backend, str) or not self.backend:
+            raise ConfigError(f"backend must be a name, got {self.backend!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgressEvent:
+    """One typed progress notification from either driver.
+
+    ``kind`` is one of:
+      "round"      — a solve/service round finished (``round``, ``open_work``,
+                     ``best``; solve rounds also carry ``lanes``);
+      "checkpoint" — a checkpoint was written (``path``);
+      "admit"      — the service admitted request ``rid`` into a slot;
+      "retire"     — the service retired request ``rid`` (``best`` is its
+                     optimum);
+      "done"       — the solve drained (``best`` is the global optimum).
+    """
+
+    kind: str
+    round: int
+    open_work: int = 0
+    best: Optional[int] = None
+    rid: Optional[int] = None
+    path: Optional[str] = None
+    lanes: Optional[Lanes] = None
+
+
+#: Event-consumer signature shared by both drivers.
+EventCallback = Callable[[ProgressEvent], None]
+
+
+class SolveResult(NamedTuple):
+    """Outcome of :meth:`Solver.solve` (payload squeezed for K = 1)."""
+
+    payload: Any
+    stats: SolveStats
+    lanes: Lanes
+
+
+class OracleResult(NamedTuple):
+    """Outcome of :meth:`Solver.oracle` (SERIAL-RB ground truth)."""
+
+    best: int
+    nodes: int
+
+
+class Solver:
+    """A solver session: one config, three execution paths.
+
+    ``on_event`` (optional) receives :class:`ProgressEvent` records from
+    whichever driver runs — the typed successor of the old ``on_round``
+    callback, shared by :meth:`solve` and the service returned by
+    :meth:`serve`.
+    """
+
+    def __init__(self, config: Optional[SolverConfig] = None,
+                 on_event: Optional[EventCallback] = None):
+        self.config = config or SolverConfig()
+        self.on_event = on_event
+
+    # -- problem resolution -------------------------------------------------
+
+    def _resolve(self, problem) -> BinaryProblem:
+        """ProblemHandle -> BinaryProblem under the config's backend (with
+        capability validation); a raw BinaryProblem passes through."""
+        if isinstance(problem, _registry.ProblemHandle):
+            try:
+                # ProblemSpec.build owns the capability check; surface its
+                # refusal as a config error (the backend came from config).
+                return problem.build(backend=self.config.backend)
+            except ValueError as e:
+                raise ConfigError(str(e)) from e
+        if isinstance(problem, BinaryProblem):
+            return problem
+        raise TypeError(
+            f"expected a registry.ProblemHandle or BinaryProblem, got "
+            f"{type(problem).__name__}")
+
+    # -- serial reference ---------------------------------------------------
+
+    def oracle(self, problem) -> OracleResult:
+        """SERIAL-RB on the family's registered scalar oracle."""
+        if isinstance(problem, _registry.ProblemHandle):
+            py = problem.oracle()
+        else:
+            py = problem                   # an already-built PyProblem
+        best, nodes, _ = serial_rb(py)
+        return OracleResult(best=best, nodes=nodes)
+
+    # -- the distributed / single-device drive ------------------------------
+
+    def solve(self, problem) -> SolveResult:
+        """Run rounds until global termination (the paper's PARALLEL-RB).
+
+        ``problem`` is a :class:`repro.registry.ProblemHandle` (built under
+        the config's backend) or an already-built ``BinaryProblem``.
+        ``config.lanes`` is the per-device lane count; with ``mesh=None``
+        the solve is single-device, otherwise rounds are the shard_map'd
+        collective version over every mesh axis.
+
+        ``resume_from`` restores a checkpoint written by any earlier run at
+        ANY lane/device count (elastic restart, paper §VII): surplus tasks
+        beyond the new lane count wait in a host-side pool and are
+        installed into idle lanes at round boundaries.
+        """
+        from repro.core import checkpoint as ckpt
+
+        cfg = self.config
+        problem = self._resolve(problem)
+        mesh = cfg.mesh
+        bootstrap_rounds = cfg.bootstrap_rounds
+
+        if mesh is None:
+            round_fn = jax.jit(make_round(problem, cfg.steps_per_round))
+            boot_fn = (jax.jit(make_round(problem, cfg.bootstrap_steps))
+                       if bootstrap_rounds else None)
+            total_lanes = cfg.lanes
+        else:
+            n_dev = int(np.prod(mesh.devices.shape))
+            round_fn = make_distributed_round(
+                problem, mesh, cfg.steps_per_round, cfg.max_ship)
+            boot_fn = (make_distributed_round(
+                problem, mesh, cfg.bootstrap_steps, cfg.max_ship)
+                if bootstrap_rounds else None)
+            total_lanes = cfg.lanes * n_dev
+
+        pool: list = []
+        if cfg.resume_from is not None:
+            if not os.path.exists(cfg.resume_from):
+                raise ConfigError(
+                    f"resume_from checkpoint not found: {cfg.resume_from}")
+            try:
+                lanes, pool = ckpt.restore(cfg.resume_from, problem,
+                                           total_lanes)
+            except ValueError as e:        # e.g. instance-slot mismatch
+                raise ConfigError(
+                    f"resume_from {cfg.resume_from!r} is incompatible with "
+                    f"this problem/config: {e}") from e
+            bootstrap_rounds = max(bootstrap_rounds, 1)  # respread work
+        else:
+            lanes = init_lanes(problem, total_lanes)
+        if mesh is not None:
+            lanes = _shard_lanes(lanes, mesh)
+
+        def feed_pool(lanes):
+            nonlocal pool
+            if pool:
+                lanes = _gather_lanes(lanes)
+                lanes, pool = ckpt.install_pending(problem, lanes, pool)
+                if mesh is not None:
+                    lanes = _shard_lanes(lanes, mesh)
+            return lanes
+
+        def emit(kind: str, **kw) -> None:
+            if self.on_event is not None:
+                self.on_event(ProgressEvent(kind=kind, **kw))
+
+        rounds, done = 0, False
+        for _ in range(bootstrap_rounds):
+            lanes = feed_pool(lanes)
+            lanes, open_work = boot_fn(lanes) if boot_fn else round_fn(lanes)
+            rounds += 1
+            if int(jnp.sum(open_work)) == 0 and not pool:
+                done = True
+                break
+        while not done and rounds < cfg.max_rounds:
+            lanes = feed_pool(lanes)
+            lanes, open_work = round_fn(lanes)
+            rounds += 1
+            open_now = int(jnp.sum(open_work))
+            if self.on_event is not None:
+                # The incumbent readback costs a device sync — only pay it
+                # when someone is listening.
+                emit("round", round=rounds, open_work=open_now,
+                     best=int(jnp.min(lanes.best)), lanes=lanes)
+            if (cfg.checkpoint_every and cfg.checkpoint_path
+                    and rounds % cfg.checkpoint_every == 0):
+                ckpt.save(cfg.checkpoint_path, _gather_lanes(lanes))
+                emit("checkpoint", round=rounds, path=cfg.checkpoint_path)
+            if open_now == 0 and not pool:
+                done = True
+
+        stats = SolveStats(
+            best=int(jnp.min(lanes.best)),
+            rounds=rounds,
+            nodes=int(jnp.sum(lanes.nodes)),
+            t_s=int(jnp.sum(lanes.t_s)),
+            t_r=int(jnp.sum(lanes.t_r)),
+            donated=int(jnp.sum(lanes.donated)),
+            lanes=int(lanes.active.shape[0]),
+        )
+        emit("done", round=rounds, open_work=0, best=stats.best)
+        best_payload = jax.tree_util.tree_map(np.asarray, lanes.best_payload)
+        if problem.num_instances == 1:
+            # Single-instance API: drop the K=1 incumbent-table dim.
+            best_payload = jax.tree_util.tree_map(lambda p: p[0],
+                                                  best_payload)
+        return SolveResult(payload=best_payload, stats=stats, lanes=lanes)
+
+    # -- the multi-tenant service -------------------------------------------
+
+    def serve(self, *, max_n: int, slots: int):
+        """A :class:`repro.service.SolverService` under this session's
+        config (lanes, steps_per_round, backend) and event stream.
+
+        Any registered *servable* family (``ProblemSpec.servable``) can be
+        submitted; admission is validated at ``submit()`` time (typed
+        :class:`repro.service.AdmissionError`).
+
+        The service driver has its own checkpoint surface
+        (``SolverService.save`` / ``.restore``) and runs single-device, so
+        a config carrying ``mesh``, ``checkpoint_every`` or ``resume_from``
+        is rejected here rather than silently ignored.
+        """
+        from repro.service.batch_problem import STACKED_BACKENDS
+        from repro.service.driver import SolverService
+
+        if self.config.backend not in STACKED_BACKENDS:
+            raise ConfigError(
+                f"backend {self.config.backend!r} is not supported by the "
+                f"stacked service (supports: {', '.join(STACKED_BACKENDS)})")
+        unsupported = [
+            name for name, is_set in (
+                ("mesh", self.config.mesh is not None),
+                ("checkpoint_every", bool(self.config.checkpoint_every)),
+                ("resume_from", self.config.resume_from is not None),
+            ) if is_set]
+        if unsupported:
+            raise ConfigError(
+                f"SolverConfig fields not honored by the service driver: "
+                f"{', '.join(unsupported)} — use SolverService.save/restore "
+                f"for service checkpoints")
+        return SolverService.from_config(self.config, max_n=max_n,
+                                         slots=slots, on_event=self.on_event)

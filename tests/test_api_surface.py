@@ -1,0 +1,39 @@
+"""The public API of the front-door modules is snapshot-guarded (ISSUE 4):
+any change to the surface of ``repro.registry`` / ``repro.solver`` must be
+reviewed by regenerating ``tools/api_surface.txt`` in the same commit.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_tool(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "api_surface.py"), *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=300)
+
+
+def test_api_surface_matches_snapshot():
+    proc = run_tool()
+    assert proc.returncode == 0, (
+        "public API drifted from tools/api_surface.txt — review the diff "
+        "and run `python tools/api_surface.py --update`:\n" + proc.stderr)
+
+
+def test_api_surface_detects_drift(tmp_path):
+    """The checker actually fails on drift (guards the guard)."""
+    snap = ROOT / "tools" / "api_surface.txt"
+    original = snap.read_text()
+    try:
+        snap.write_text(original + "  def rogue_symbol()\n")
+        proc = run_tool()
+        assert proc.returncode == 1
+        assert "rogue_symbol" in proc.stderr
+    finally:
+        snap.write_text(original)

@@ -196,6 +196,35 @@ def test_service_continuous_batching_reuses_slots():
         assert results[100 + i].optimum == ORACLES[i % len(MIX)]
 
 
+# -- admission: typed errors at submit() time (ISSUE 4 satellite) -------------
+
+
+def test_submit_rejects_unregistered_family():
+    from repro.service import AdmissionError
+    svc = SolverService(max_n=18, slots=2, num_lanes=4)
+    with pytest.raises(AdmissionError, match="unknown problem family"):
+        svc.submit(SolveRequest(rid=0, graph=MIX[0][1], family="tsp"))
+    assert not svc.queue                      # nothing silently enqueued
+
+
+def test_submit_rejects_unservable_family():
+    """subset sum is registered (CLI + oracle) but has no service packing:
+    the failure is a typed AdmissionError at submit(), not a crash deep
+    inside table packing."""
+    from repro.service import AdmissionError
+    svc = SolverService(max_n=18, slots=2, num_lanes=4)
+    with pytest.raises(AdmissionError, match="not servable"):
+        svc.submit(SolveRequest(rid=0, graph=MIX[0][1], family="ss"))
+
+
+def test_submit_rejects_oversized_instance():
+    from repro.service import AdmissionError
+    svc = SolverService(max_n=14, slots=2, num_lanes=4)
+    with pytest.raises(AdmissionError, match="max_n"):
+        svc.submit(SolveRequest(rid=0, graph=gnp_graph(20, 0.3, seed=1),
+                                family="vc"))
+
+
 # -- tenant isolation: stealing never crosses instances -----------------------
 
 

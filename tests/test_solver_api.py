@@ -1,0 +1,211 @@
+"""ISSUE 4 acceptance tests: the unified Solver session API.
+
+Covers (a) SolverConfig validation, (b) the deprecation shims (old
+``core.distributed.solve`` kwargs and direct ``SolverService(...)``)
+staying bitwise-identical to the facade, (c) the typed progress-event
+stream shared by both drivers, and (d) registry resolution through
+``Solver.solve`` / ``Solver.oracle``.
+"""
+
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.core.distributed import solve as legacy_solve
+from repro.problems import gnp_graph, make_vertex_cover
+from repro.service import AdmissionError, SolveRequest, SolverService
+from repro.solver import (ConfigError, ProgressEvent, Solver, SolverConfig,
+                          SolveResult)
+
+VC = registry.problem("vc", "gnp:14:30:5")
+CFG = SolverConfig(lanes=8, steps_per_round=16, bootstrap_rounds=2,
+                   bootstrap_steps=4)
+
+
+# -- SolverConfig validation --------------------------------------------------
+
+
+def test_config_rejects_bad_fields():
+    with pytest.raises(ConfigError):
+        SolverConfig(lanes=0)
+    with pytest.raises(ConfigError):
+        SolverConfig(steps_per_round=0)
+    with pytest.raises(ConfigError):
+        SolverConfig(max_ship=0)
+    with pytest.raises(ConfigError):
+        SolverConfig(bootstrap_rounds=2, bootstrap_steps=0)
+
+
+def test_config_checkpoint_every_requires_path():
+    with pytest.raises(ConfigError, match="checkpoint_path"):
+        SolverConfig(checkpoint_every=5)
+    SolverConfig(checkpoint_every=5, checkpoint_path="x.ckpt")  # fine
+
+
+def test_backend_validated_against_registry_capabilities():
+    """ss advertises jnp only: a pallas session must refuse to build it,
+    with the capability list in the error."""
+    solver = Solver(SolverConfig(lanes=4, backend="pallas"))
+    with pytest.raises(ConfigError, match="advertises: jnp"):
+        solver.solve(registry.problem("ss", "ss:8:1"))
+    with pytest.raises(ConfigError):
+        Solver(SolverConfig(backend="cuda")).solve(VC)
+
+
+def test_resume_from_missing_checkpoint_is_config_error():
+    cfg = SolverConfig(lanes=4, resume_from="/does/not/exist.ckpt")
+    with pytest.raises(ConfigError, match="not found"):
+        Solver(cfg).solve(VC)
+
+
+def test_resume_from_mismatched_slot_count_is_config_error(tmp_path):
+    """A service checkpoint (K=4 incumbent slots) cannot resume a
+    single-instance solve: surfaced as ConfigError, not a deep shape
+    failure."""
+    svc = Solver(SolverConfig(lanes=8, steps_per_round=4)).serve(
+        max_n=14, slots=4)
+    svc.submit(SolveRequest(rid=0, graph=gnp_graph(12, 0.3, seed=9),
+                            family="vc"))
+    svc.step_round()
+    path = str(tmp_path / "svc.ckpt")
+    svc.save(path)
+    cfg = SolverConfig(lanes=8, steps_per_round=16, resume_from=path)
+    with pytest.raises(ConfigError, match="incompatible"):
+        Solver(cfg).solve(VC)
+
+
+def test_resume_elastic_lane_count_through_facade(tmp_path):
+    """Elastic restart is config, not surgery: checkpoint at 4 lanes,
+    resume at 16 (and vice versa is covered by engine tests) — optimum
+    still matches the oracle."""
+    path = str(tmp_path / "run.ckpt")
+    cfg = SolverConfig(lanes=4, steps_per_round=8, max_rounds=3,
+                       checkpoint_every=1, checkpoint_path=path)
+    Solver(cfg).solve(VC)
+    res = Solver(SolverConfig(lanes=16, steps_per_round=32,
+                              resume_from=path)).solve(VC)
+    assert res.stats.best == Solver().oracle(VC).best
+
+
+# -- deprecation shims: warn, and stay bitwise-identical ----------------------
+
+
+def test_legacy_solve_warns_and_matches_facade():
+    prob = VC.build()
+    with pytest.warns(DeprecationWarning, match="repro.solver.Solver"):
+        payload, stats, _ = legacy_solve(prob, num_lanes=8,
+                                         steps_per_round=16,
+                                         bootstrap_rounds=2,
+                                         bootstrap_steps=4)
+    res = Solver(CFG).solve(VC)
+    assert isinstance(res, SolveResult)
+    assert stats == res.stats                     # full SolveStats equality
+    np.testing.assert_array_equal(payload, res.payload)
+
+
+def test_legacy_service_warns_and_matches_facade():
+    mix = [("vc", gnp_graph(12, 0.3, seed=9)),
+           ("ds", gnp_graph(14, 0.25, seed=2))]
+    reqs = [SolveRequest(rid=i, graph=g, family=f)
+            for i, (f, g) in enumerate(mix)]
+    with pytest.warns(DeprecationWarning, match="serve"):
+        legacy = SolverService(max_n=14, slots=2, num_lanes=8,
+                               steps_per_round=16)
+    old = legacy.run(list(reqs))
+    new = Solver(SolverConfig(lanes=8, steps_per_round=16)).serve(
+        max_n=14, slots=2).run(list(reqs))
+    for i in range(len(mix)):
+        assert old[i].optimum == new[i].optimum
+        np.testing.assert_array_equal(old[i].payload, new[i].payload)
+        assert (old[i].admitted_round, old[i].retired_round) == \
+               (new[i].admitted_round, new[i].retired_round)
+
+
+def test_legacy_on_round_still_fires_through_event_stream():
+    seen = []
+    with pytest.warns(DeprecationWarning):
+        legacy_solve(VC.build(), num_lanes=4, steps_per_round=16,
+                     on_round=lambda r, lanes, open_work: seen.append(
+                         (r, open_work, lanes is not None)))
+    assert seen and all(ok for _, _, ok in seen)
+    assert [r for r, _, _ in seen] == sorted(r for r, _, _ in seen)
+
+
+# -- the typed event stream ---------------------------------------------------
+
+
+def test_solve_event_stream():
+    events = []
+    res = Solver(CFG, on_event=events.append).solve(VC)
+    assert all(isinstance(e, ProgressEvent) for e in events)
+    rounds = [e for e in events if e.kind == "round"]
+    assert rounds and rounds[-1].open_work == 0
+    assert all(e.lanes is not None for e in rounds)
+    done = [e for e in events if e.kind == "done"]
+    assert len(done) == 1 and done[0].best == res.stats.best
+
+
+def test_checkpoint_events_carry_path(tmp_path):
+    path = str(tmp_path / "ev.ckpt")
+    events = []
+    cfg = SolverConfig(lanes=8, steps_per_round=8, checkpoint_every=1,
+                       checkpoint_path=path)
+    Solver(cfg, on_event=events.append).solve(VC)
+    cps = [e for e in events if e.kind == "checkpoint"]
+    assert cps and all(e.path == path for e in cps)
+
+
+def test_service_event_stream_admit_retire():
+    events = []
+    svc = Solver(SolverConfig(lanes=8, steps_per_round=16),
+                 on_event=events.append).serve(max_n=14, slots=2)
+    svc.run([SolveRequest(rid=7, graph=gnp_graph(12, 0.3, seed=9),
+                          family="vc")])
+    kinds = [e.kind for e in events]
+    assert "admit" in kinds and "retire" in kinds and "round" in kinds
+    retire = [e for e in events if e.kind == "retire"][0]
+    assert retire.rid == 7 and retire.best == svc.results[7].optimum
+    admit = [e for e in events if e.kind == "admit"][0]
+    assert admit.rid == 7 and admit.round <= retire.round
+
+
+# -- registry resolution ------------------------------------------------------
+
+
+def test_solver_accepts_raw_binary_problem():
+    g = gnp_graph(12, 0.3, seed=9)
+    res = Solver(CFG).solve(make_vertex_cover(g))
+    assert res.stats.best == Solver().oracle(registry.problem("vc", g)).best
+
+
+def test_solver_rejects_unknown_problem_type():
+    with pytest.raises(TypeError):
+        Solver(CFG).solve("vc")
+
+
+def test_registry_unknown_family():
+    with pytest.raises(registry.UnknownProblemError, match="registered"):
+        registry.get("tsp")
+
+
+def test_registry_handle_parses_spec_strings():
+    h = registry.problem("vc", "reg:10:2:1")
+    assert h.label.startswith("vc:reg_10_2_1")
+    assert h.spec.servable
+    assert not registry.get("ss").servable
+
+
+def test_serve_rejects_non_stacked_backend():
+    with pytest.raises(ConfigError, match="stacked service"):
+        Solver(SolverConfig(backend="tpu-v9")).serve(max_n=8, slots=2)
+
+
+def test_serve_rejects_config_fields_it_cannot_honor():
+    """The service has its own save/restore surface: a config carrying
+    solve-only policy must be rejected, not silently ignored."""
+    cfg = SolverConfig(lanes=8, checkpoint_every=1,
+                       checkpoint_path="svc.ckpt")
+    with pytest.raises(ConfigError, match="checkpoint_every"):
+        Solver(cfg).serve(max_n=8, slots=2)
+    with pytest.raises(ConfigError, match="resume_from"):
+        Solver(SolverConfig(resume_from="svc.ckpt")).serve(max_n=8, slots=2)

@@ -1,0 +1,124 @@
+"""Public-API surface snapshot for the front-door modules (ISSUE 4).
+
+``repro.registry`` and ``repro.solver`` are THE public API: every
+launcher, benchmark and downstream user goes through them, so their
+surface must never change silently.  This tool renders each module's
+``__all__`` — dataclass fields, NamedTuple fields, class methods and
+function signatures — into a canonical text form and compares it against
+the checked-in snapshot ``tools/api_surface.txt``:
+
+  python tools/api_surface.py            # check (exit 1 + diff on drift)
+  python tools/api_surface.py --update   # rewrite the snapshot
+
+Run by the docs-smoke CI job (wired through ``tools/docs_smoke.py``) and
+by ``tests/test_api_surface.py``, so an unreviewed surface change fails
+CI until the snapshot is updated in the same commit — which is exactly
+the review hook the snapshot exists to force.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import difflib
+import importlib
+import inspect
+import os
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+MODULES = ("repro.registry", "repro.solver")
+SNAPSHOT = pathlib.Path(__file__).resolve().parent / "api_surface.txt"
+
+
+def _signature(obj) -> str:
+    try:
+        sig = str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+    # Callable defaults repr with a memory address; canonicalize so the
+    # snapshot is deterministic across processes.
+    return re.sub(r"<(function|bound method) ([^ ]+) at 0x[0-9a-f]+>",
+                  r"<\1 \2>", sig)
+
+
+def _describe_class(name: str, obj: type) -> list:
+    lines = []
+    if dataclasses.is_dataclass(obj):
+        fields = ", ".join(
+            f"{f.name}: {getattr(f.type, '__name__', f.type)}"
+            for f in dataclasses.fields(obj))
+        lines.append(f"  dataclass {name}({fields})")
+    elif issubclass(obj, tuple) and hasattr(obj, "_fields"):
+        lines.append(f"  namedtuple {name}({', '.join(obj._fields)})")
+    else:
+        bases = ", ".join(b.__name__ for b in obj.__bases__)
+        lines.append(f"  class {name}({bases})")
+    for mname, member in sorted(vars(obj).items()):
+        if mname.startswith("_") and mname != "__init__":
+            continue
+        if isinstance(member, property):
+            lines.append(f"    property {mname}")
+        elif isinstance(member, (classmethod, staticmethod)):
+            lines.append(f"    {type(member).__name__} {mname}"
+                         f"{_signature(member.__func__)}")
+        elif callable(member):
+            lines.append(f"    def {mname}{_signature(member)}")
+    return lines
+
+
+def render() -> str:
+    out = []
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        out.append(f"module {modname}")
+        for name in sorted(mod.__all__):
+            obj = getattr(mod, name)
+            if isinstance(obj, type):
+                out.extend(_describe_class(name, obj))
+            elif callable(obj):
+                out.append(f"  def {name}{_signature(obj)}")
+            else:
+                out.append(f"  const {name} = {obj!r}")
+        out.append("")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the snapshot instead of checking")
+    ap.add_argument("--check", action="store_true",
+                    help="explicit check mode (the default)")
+    args = ap.parse_args(argv)
+
+    current = render()
+    if args.update:
+        SNAPSHOT.write_text(current, encoding="utf-8")
+        print(f"api-surface: snapshot updated -> "
+              f"{os.path.relpath(SNAPSHOT)}")
+        return 0
+
+    if not SNAPSHOT.exists():
+        print("api-surface: snapshot missing; run with --update",
+              file=sys.stderr)
+        return 1
+    want = SNAPSHOT.read_text(encoding="utf-8")
+    if current == want:
+        print(f"api-surface: {', '.join(MODULES)} match the snapshot")
+        return 0
+    sys.stderr.write(
+        "api-surface: PUBLIC API CHANGED — review the diff, then rerun "
+        "with --update to accept:\n")
+    sys.stderr.writelines(difflib.unified_diff(
+        want.splitlines(keepends=True), current.splitlines(keepends=True),
+        fromfile="api_surface.txt", tofile="current"))
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,11 @@ markdown:
   * commands matching ``--skip`` (default: ``pytest``, because the tier-1
     suite is its own CI job) are reported and not executed.
 
+The public-API surface check (``tools/api_surface.py``, ISSUE 4) is
+appended to the command list so the docs-smoke CI job also fails on
+unreviewed ``repro.registry``/``repro.solver`` surface changes
+(``--no-api-surface`` opts out).
+
 Usage:
 
   python tools/docs_smoke.py [--readme README.md] [--list] [--skip REGEX]
@@ -61,6 +66,8 @@ def main(argv=None) -> int:
                     help="regex of commands to report but not execute")
     ap.add_argument("--list", action="store_true",
                     help="print the extracted commands and exit")
+    ap.add_argument("--no-api-surface", action="store_true",
+                    help="do not append the tools/api_surface.py check")
     args = ap.parse_args(argv)
 
     root = pathlib.Path(args.readme).resolve().parent
@@ -70,6 +77,8 @@ def main(argv=None) -> int:
         print(f"docs-smoke: no bash commands found in {args.readme}",
               file=sys.stderr)
         return 1
+    if not args.no_api_surface:
+        commands.append(f"{sys.executable} tools/api_surface.py")
 
     skip = re.compile(args.skip) if args.skip else None
     if args.list:
