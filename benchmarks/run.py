@@ -5,6 +5,8 @@
   fig10   — T_S/T_R steal-traffic gap growth (paper Fig. 10)
   kernels — Pallas kernel micro (shapes, ref timings, interpret deltas)
   roofline— aggregated dry-run roofline table (EXPERIMENTS.md §Roofline)
+  service — continuous-batching throughput vs sequential solves
+  latency — scheduling policies on a Poisson trace (p50/p95, deadlines)
 
 ``python -m benchmarks.run [--quick] [--only NAME]``
 CSV artifacts land in benchmarks/artifacts/.
@@ -16,8 +18,8 @@ import argparse
 import time
 
 from benchmarks import (fig10_steal_traffic, kernel_micro, roofline_table,
-                        service_throughput, table1_vertex_cover,
-                        table2_dominating_set)
+                        service_latency, service_throughput,
+                        table1_vertex_cover, table2_dominating_set)
 
 SUITES = [
     ("table1", table1_vertex_cover.main),
@@ -26,6 +28,7 @@ SUITES = [
     ("kernels", kernel_micro.main),
     ("roofline", roofline_table.main),
     ("service", service_throughput.main),
+    ("latency", service_latency.main),
 ]
 
 

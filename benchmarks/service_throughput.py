@@ -92,7 +92,9 @@ def run_service(mix, oracles, backend: str = "jnp") -> float:
     reqs = [SolveRequest(rid=i, graph=g, family=fam)
             for i, (fam, g) in enumerate(mix)]
     t0 = time.perf_counter()
-    results = svc.run(reqs)
+    for r in reqs:
+        svc.submit(r)
+    results = svc.drain()
     wall = time.perf_counter() - t0
     for i, ((family, graph), want) in enumerate(zip(mix, oracles)):
         assert results[i].optimum == want, (graph.name, results[i].optimum)

@@ -10,7 +10,9 @@ half the paper only gestures at (join-leave):
   solver state is O(W · D_MAX) int8 — the compact-encoding payoff again;
   stacks are NOT saved, they are reconstructed by CONVERTINDEX replay on
   restore.  ``extra`` lets callers (the solver service) ride metadata
-  arrays in the same atomic file.
+  arrays in the same atomic file; non-array host metadata (the service's
+  queued-request heap and ticket states) rides as JSON bytes via
+  ``pack_json``/``unpack_json``.
 
 * ``restore`` — rebuild ``Lanes`` for an arbitrary new lane count W'
   (elastic shrink/grow).  The first W' active tasks are installed directly;
@@ -26,9 +28,10 @@ half the paper only gestures at (join-leave):
 from __future__ import annotations
 
 import io
+import json
 import os
 import tempfile
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +93,22 @@ def read_extra(path: str) -> Dict[str, np.ndarray]:
             if key.startswith(_EXTRA_PREFIX):
                 out[key[len(_EXTRA_PREFIX):]] = z[key]
     return out
+
+
+def pack_json(obj: Any) -> np.ndarray:
+    """Encode a JSON-serializable object as a uint8 array.
+
+    Checkpoints are single ``.npz`` files written without pickling;
+    structured host metadata that is not naturally an array (the service's
+    queued-request heap and ticket states) rides as UTF-8 JSON bytes in an
+    ordinary ``extra`` array instead.  Inverse: :func:`unpack_json`.
+    """
+    return np.frombuffer(json.dumps(obj).encode("utf-8"), np.uint8).copy()
+
+
+def unpack_json(arr: np.ndarray) -> Any:
+    """Decode an array written by :func:`pack_json`."""
+    return json.loads(np.asarray(arr, np.uint8).tobytes().decode("utf-8"))
 
 
 class PendingTask:

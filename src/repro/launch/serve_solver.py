@@ -1,22 +1,33 @@
 """Multi-tenant solver service launcher: many instances, one lane pool.
 
   PYTHONPATH=src python -m repro.launch.serve_solver \
-      --instances vc:gnp:20:30:5,ds:gnp:16:30:7,vc:reg:24:4:1 \
-      --lanes 32 --slots 4 [--backend pallas] [--ckpt svc.ckpt] [--resume]
+      --instances vc:gnp:20:30:5@prio=2,ds:gnp:16:30:7@deadline=60,vc:reg:24:4:1 \
+      --lanes 32 --slots 4 [--scheduler sjf] [--backend pallas] \
+      [--ckpt svc.ckpt] [--resume]
 
-Each instance spec is ``<family>:<instance>`` where ``<family>`` is any
-*servable* registered problem family (``repro.registry``) and
-``<instance>`` uses that family's own registered parser
-(``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``, ``cell60``).
-``--repeat R`` replays the whole mix R times (distinct request ids) to
-exercise continuous batching past the slot count.  ``--backend pallas``
-routes the shared stacked evaluate through the batched masked-popcount
-kernel (DESIGN.md §5.3) — results are bitwise-identical to jnp.
+Each instance spec is ``<family>:<instance>[@<attr>=<v>...]`` where
+``<family>`` is any *servable* registered problem family
+(``repro.registry``) and ``<instance>`` uses that family's own registered
+parser (``gnp:<n>:<p*100>:<seed>``, ``reg:<n>:<k>:<seed>``, ``cell60``).
+Per-request lifecycle attributes ride after ``@`` separators:
+``prio=<int>`` (admission priority under the priority scheduler),
+``deadline=<rounds>`` (expire the request that many service rounds after
+submission) and ``budget=<nodes>`` (evict after that many search nodes) —
+e.g. ``vc:gnp:20:30:5@prio=3@deadline=80``.  ``--scheduler`` picks the
+admission policy (``priority`` default, ``sjf``, ``fifo`` —
+``repro.service.scheduler``).  ``--repeat R`` replays the whole mix R
+times (distinct request ids) to exercise continuous batching past the
+slot count.  ``--backend pallas`` routes the shared stacked evaluate
+through the batched masked-popcount kernel (DESIGN.md §5.3) — results are
+bitwise-identical to jnp.
 
-The launcher contains zero per-family branching: admission rules live in
-the registry + ``SolverService.submit`` (typed ``AdmissionError``), and
-the service is built through the :class:`repro.solver.Solver` facade
-(DESIGN.md §6).
+``submit()`` returns a Ticket per request; the drain loop reports each
+ticket's terminal status (done / expired / cancelled) and its
+submission-to-resolution latency in rounds.  The launcher contains zero
+per-family branching: admission rules live in the registry +
+``SolverService.submit`` (typed ``AdmissionError`` after a ``reject``
+event), and the service is built through the :class:`repro.solver.Solver`
+facade (DESIGN.md §6/§7).
 """
 
 from __future__ import annotations
@@ -25,15 +36,19 @@ import argparse
 import time
 
 from repro import registry
-from repro.service import SolveRequest, SolverService
+from repro.service import SCHEDULERS, SolveRequest, SolverService
 from repro.solver import Solver, SolverConfig
+
+_ATTRS = {"prio": "priority", "deadline": "deadline_rounds",
+          "budget": "node_budget"}
 
 
 def parse_workload(spec: str, repeat: int):
-    """-> list of (family, instance) over the comma-separated mix."""
+    """-> list of (family, instance, lifecycle-kwargs) over the mix."""
     out = []
     for item in spec.split(","):
-        family, _, inst = item.partition(":")
+        body, *attrs = item.split("@")
+        family, _, inst = body.partition(":")
         if not inst:
             raise SystemExit(
                 f"bad instance spec {item!r}: want <family>:<instance>")
@@ -45,8 +60,20 @@ def parse_workload(spec: str, repeat: int):
             raise SystemExit(
                 f"bad instance spec {item!r}: family {family!r} is not "
                 f"servable (no service packing registered)")
+        kwargs = {}
+        for attr in attrs:
+            key, _, val = attr.partition("=")
+            if key not in _ATTRS or not val:
+                raise SystemExit(
+                    f"bad instance spec {item!r}: want @<attr>=<int> with "
+                    f"attr in {sorted(_ATTRS)}, got {attr!r}")
+            try:
+                kwargs[_ATTRS[key]] = int(val)
+            except ValueError:
+                raise SystemExit(
+                    f"bad instance spec {item!r}: {attr!r} is not an int")
         try:
-            out.append((family, pspec.parse(inst)))
+            out.append((family, pspec.parse(inst), kwargs))
         except ValueError as e:
             raise SystemExit(f"bad instance spec {item!r}: {e}")
     return out * repeat
@@ -60,6 +87,9 @@ def main() -> None:
     ap.add_argument("--repeat", type=int, default=1)
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--scheduler", choices=sorted(SCHEDULERS), default=None,
+                    help="admission policy (DESIGN.md §7; default: priority,"
+                         " or the checkpointed policy with --resume)")
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
                     help="shared-evaluate kernel backend (DESIGN.md §5.3)")
     ap.add_argument("--steps-per-round", type=int, default=64)
@@ -79,30 +109,33 @@ def main() -> None:
     if args.resume:
         svc = SolverService.restore(args.ckpt, num_lanes=args.lanes,
                                     steps_per_round=args.steps_per_round,
-                                    backend=args.backend)
+                                    backend=args.backend,
+                                    scheduler=args.scheduler)
         print(f"restored service: slots={svc.slot_rid} "
-              f"pool={len(svc.pool)} rounds={svc.rounds}")
-        # In-flight slots finish under their checkpointed rids; the
-        # --instances workload is submitted as NEW requests with rids past
-        # everything the checkpoint knows about (the checkpoint does not
-        # record drained queues, so resubmission is the caller's job).
-        rid0 = 1 + max([r for r in svc.slot_rid if r >= 0] + [-1])
-        reqs = [SolveRequest(rid=rid0 + i, graph=g, family=fam)
-                for i, (fam, g) in enumerate(workload)]
+              f"queue={len(svc.queue)} pool={len(svc.pool)} "
+              f"rounds={svc.rounds} scheduler={svc.sched.policy.name}")
+        # In-flight slots and the restored queue finish under their
+        # checkpointed rids/tickets; the --instances workload is submitted
+        # as NEW requests with rids past everything the checkpoint issued
+        # (pre-ticket checkpoints carry no ticket table, so in-flight slot
+        # rids count too).
+        rid0 = 1 + max(list(svc.tickets)
+                       + [r for r in svc.slot_rid if r >= 0] + [-1])
     else:
-        max_n = max(registry.get(fam).size(g) for fam, g in workload)
+        max_n = max(registry.get(fam).size(g) for fam, g, _ in workload)
         config = SolverConfig(lanes=args.lanes,
                               steps_per_round=args.steps_per_round,
-                              backend=args.backend)
+                              backend=args.backend,
+                              scheduler=args.scheduler or "priority")
         svc = Solver(config).serve(max_n=max_n, slots=args.slots)
-        reqs = [SolveRequest(rid=i, graph=g, family=fam)
-                for i, (fam, g) in enumerate(workload)]
-    for r in reqs:
-        svc.submit(r)
+        rid0 = 0
+    reqs = [SolveRequest(rid=rid0 + i, graph=g, family=fam, **kwargs)
+            for i, (fam, g, kwargs) in enumerate(workload)]
+    tickets = {r.rid: svc.submit(r) for r in reqs}
 
     print(f"serving {len(reqs)} requests over {args.lanes} lanes / "
           f"{svc.spec.k} slots (padded n={svc.spec.n}, "
-          f"backend={svc.backend})")
+          f"backend={svc.backend}, scheduler={svc.sched.policy.name})")
     t0 = time.time()
     while svc._has_work():
         svc.step_round()
@@ -111,16 +144,28 @@ def main() -> None:
             svc.save(args.ckpt)
     wall = time.time() - t0
     by_rid = {q.rid: q for q in reqs}
-    for rid in sorted(svc.results):
-        r = svc.results[rid]
+    # Pre-ticket checkpoints restore in-flight slots without tickets, so
+    # report over tickets AND results.
+    served = sorted(set(svc.tickets) | set(svc.results))
+    for rid in served:
+        ticket = svc.tickets.get(rid)
         req = by_rid.get(rid)
         label = (f"{req.family}[{req.graph.name}]" if req is not None
-                 else "(restored in-flight)")
-        print(f"  rid={r.rid:3d} {label} optimum={r.optimum} rounds="
-              f"{r.admitted_round}..{r.retired_round}")
-    done = len(svc.results)
-    print(f"drained {done} requests in {svc.rounds} rounds, "
-          f"{wall:.2f}s -> {done / max(wall, 1e-9):.2f} instances/s")
+                 else "(restored)")
+        res = svc.results.get(rid)
+        shown = ("cancelled" if res is None
+                 else f"optimum={res.optimum}" if res.status == "done"
+                 else f"{res.status} anytime={res.optimum}")
+        span = (f"rounds={ticket.submitted_round}..{ticket.finished_round} "
+                f"latency={ticket.finished_round - ticket.submitted_round}"
+                if ticket is not None and ticket.finished_round is not None
+                else f"rounds=..{res.retired_round}" if res is not None
+                else "")
+        print(f"  rid={rid:3d} {label} {shown} {span}")
+    done = sum(1 for r in svc.results.values() if r.status == "done")
+    print(f"drained {len(served)} requests ({done} exact) in "
+          f"{svc.rounds} rounds, {wall:.2f}s -> "
+          f"{done / max(wall, 1e-9):.2f} instances/s")
     if args.ckpt:
         svc.save(args.ckpt)
         print(f"service checkpoint -> {args.ckpt}")

@@ -47,6 +47,7 @@ __all__ = [
     "ProblemSpec",
     "UnknownProblemError",
     "get",
+    "instance_size",
     "names",
     "problem",
     "problem_backends",
@@ -197,6 +198,13 @@ def names() -> Tuple[str, ...]:
 def problem_backends(name: str) -> Tuple[str, ...]:
     """Kernel backends supported by registered family ``name``."""
     return get(name).backends
+
+
+def instance_size(name: str, instance: Any) -> int:
+    """Registered ``size()`` of ``instance`` under family ``name`` — the
+    admission measure the service checks against ``max_n`` and the key the
+    ``ShortestJobFirst`` scheduling policy orders by."""
+    return int(get(name).size(instance))
 
 
 def problem(name: str, instance: Any) -> ProblemHandle:

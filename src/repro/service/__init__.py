@@ -2,19 +2,29 @@
 
 ``batch_problem`` stacks K padded instances (vertex cover and/or dominating
 set) into one ``BinaryProblem`` whose per-lane state carries an instance
-id; ``driver`` streams solve requests through a fixed pool of W lanes with
-admission, instance-scoped stealing, per-instance retirement and elastic
-checkpointing.
+id; ``driver`` is the pure round-stepping engine that streams requests
+through a fixed pool of W lanes with admission, instance-scoped stealing,
+per-instance retirement/eviction and elastic checkpointing; ``scheduler``
+is the pluggable policy layer deciding admission order and deadline /
+node-budget evictions; ``ticket`` holds the request-lifecycle types —
+``submit()`` returns a :class:`Ticket` future (DESIGN.md §7).
 """
 
 from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC,
                                          STACKED_BACKENDS, StackedSpec,
                                          StackedTables, SvcState)
-from repro.service.driver import (AdmissionError, SolveRequest,
-                                  SolverService)
+from repro.service.driver import SolverService
+from repro.service.scheduler import (SCHEDULERS, Fifo, PriorityFifo,
+                                     Scheduler, SchedulingPolicy,
+                                     ShortestJobFirst, make_policy)
+from repro.service.ticket import (AdmissionError, RequestResult,
+                                  SolveRequest, Ticket, TicketCancelled,
+                                  TicketStatus)
 
 __all__ = [
-    "AdmissionError", "FAMILY_DS", "FAMILY_VC", "STACKED_BACKENDS",
-    "StackedSpec", "StackedTables", "SvcState", "SolveRequest",
-    "SolverService",
+    "AdmissionError", "FAMILY_DS", "FAMILY_VC", "Fifo", "PriorityFifo",
+    "RequestResult", "SCHEDULERS", "STACKED_BACKENDS", "Scheduler",
+    "SchedulingPolicy", "ShortestJobFirst", "SolveRequest", "SolverService",
+    "StackedSpec", "StackedTables", "SvcState", "Ticket", "TicketCancelled",
+    "TicketStatus", "make_policy",
 ]

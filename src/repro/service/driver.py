@@ -7,19 +7,36 @@ ticks, admission/retirement at tick boundaries) applied to backtracking:
     round (expand → instance-scoped steal → per-instance termination);
   * a *slot* is one of K stacked-instance table entries
     (``batch_problem.StackedSpec``); a request occupies a slot from
-    admission to retirement;
-  * *admission* resolves the request's family through the
-    :mod:`repro.registry` (any registered family with service packing is
-    admissible — no name table here; invalid requests raise a typed
-    :class:`AdmissionError` at ``submit()`` time) and writes the padded
-    instance into the stacked tables (they are jit ARGUMENTS, so no
-    recompilation), resets the slot's incumbent and seeds the instance
-    root onto one idle lane — every other lane the instance ever uses
-    arrives via stealing, the same bootstrap the paper uses for its
-    virtual topology;
+    admission to retirement or eviction;
+  * *admission* pops the next request from the pluggable scheduling policy
+    (:mod:`repro.service.scheduler` — priority heap by default, NOT the
+    submission order), resolves its family through the
+    :mod:`repro.registry` and writes the padded instance into the stacked
+    tables (they are jit ARGUMENTS, so no recompilation), resets the
+    slot's incumbent and seeds the instance root onto one idle lane —
+    every other lane the instance ever uses arrives via stealing, the
+    same bootstrap the paper uses for its virtual topology;
   * *retirement* fires when the per-instance open-work counter reaches
-    zero: the slot's optimum + payload are recorded and the slot is free
-    for the next queued request.
+    zero: the slot's optimum + payload are recorded, the ticket resolves
+    DONE and the slot is free for the next queued request;
+  * *eviction* fires on ``Ticket.cancel()``, a missed ``deadline_rounds``
+    or an exhausted ``node_budget``: the slot's best-so-far is recorded
+    as an anytime result, its lanes are deactivated and unbound within
+    one round, and the ticket resolves CANCELLED / EXPIRED.
+
+This module is the PURE ROUND-STEPPING ENGINE of the request lifecycle:
+it owns lanes, tables and the admit → round → retire → evict mechanics.
+Every "which request, when" decision (admission order, deadlines,
+budgets) is delegated to the :class:`~repro.service.scheduler.Scheduler`
+policy layer, so scheduling policies plug in without touching this file.
+
+``submit()`` returns a :class:`~repro.service.ticket.Ticket` — a
+future-like handle with ``status`` / ``result(timeout=)`` / ``cancel()``.
+Lifecycle transitions stream through the typed
+:class:`~repro.solver.ProgressEvent` stream (kinds ``admit``, ``retire``,
+``incumbent`` — per-request anytime incumbents — ``reject``, ``cancel``,
+``expire``).  The legacy surface (``run()``, int-rid tickets) remains as
+DeprecationWarning shims, bitwise-identical on the default policy.
 
 Tenant isolation: stealing (intra- and cross-device) never pairs lanes
 across instances, and per-instance incumbents mean one tenant's bound
@@ -28,9 +45,10 @@ dedicated single-instance solve (asserted against the serial oracle by
 ``tests/test_service.py``).
 
 Elastic operation: ``save``/``restore`` persist the whole service (lane
-control state + slot tables + queue-of-record metadata) through
-``repro.core.checkpoint``; restoring onto W' ≠ W lanes parks surplus tasks
-in an instance-tagged pending pool that drains at round boundaries.
+control state + slot tables + the queued-request heap + ticket states)
+through ``repro.core.checkpoint``; restoring onto W' ≠ W lanes parks
+surplus tasks in an instance-tagged pending pool that drains at round
+boundaries, and a restored queue pops in exactly the saved order.
 
 The shared evaluate's masked-popcount pass is backend-pluggable
 (``backend="jnp" | "pallas"``, forwarded to ``StackedSpec.bind`` —
@@ -40,10 +58,8 @@ backend is an execution choice like the lane count, not checkpoint state.
 
 from __future__ import annotations
 
-import dataclasses
 import warnings
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,33 +70,34 @@ from repro.core import checkpoint as ckpt
 from repro.core.api import INF_VALUE, UNVISITED
 from repro.core.distributed import make_round
 from repro.core.engine import NO_INSTANCE, init_lanes
-from repro.problems.graphs import Graph
+from repro.problems.graphs import Graph, num_words
 from repro.service.batch_problem import StackedSpec, StackedTables
+from repro.service.scheduler import (Scheduler, SchedulingPolicy, QueueItem,
+                                     make_policy)
+from repro.service.ticket import (TERMINAL, AdmissionError, RequestResult,
+                                  SolveRequest, Ticket, TicketStatus)
+
+__all__ = [
+    "AdmissionError",
+    "RequestResult",
+    "SolveRequest",
+    "SolverService",
+]
 
 
-class AdmissionError(ValueError):
-    """A request the service can never run: unregistered family, family
-    without service packing, or instance larger than the deployment's
-    ``max_n``.  Raised at ``submit()`` time — never deep inside packing."""
+class _ResultMap(dict):
+    """Results keyed by int rid; lookups normalize Tickets through
+    ``int()`` so pre-ticket code (``results[svc.submit(r)]``) keeps
+    working — via the Ticket.__int__ deprecation shim."""
 
+    def __getitem__(self, key):
+        return super().__getitem__(int(key))
 
-@dataclasses.dataclass
-class SolveRequest:
-    """One tenant's instance.  ``family`` is any *servable* registered
-    problem family (``repro.registry.get(family).servable``)."""
+    def __contains__(self, key):
+        return super().__contains__(int(key))
 
-    rid: int
-    graph: Graph
-    family: str
-
-
-@dataclasses.dataclass
-class RequestResult:
-    rid: int
-    optimum: int
-    payload: np.ndarray        # uint32[w] solution bitset (padded width)
-    admitted_round: int
-    retired_round: int
+    def get(self, key, default=None):
+        return super().get(int(key), default)
 
 
 class SolverService:
@@ -92,24 +109,27 @@ class SolverService:
     """
 
     def __init__(self, *, max_n: int, slots: int, num_lanes: int,
-                 steps_per_round: int = 64, backend: str = "jnp"):
+                 steps_per_round: int = 64, backend: str = "jnp",
+                 scheduler: Union[str, SchedulingPolicy] = "priority"):
         warnings.warn(
             "direct SolverService(...) construction is deprecated; use "
             "repro.solver.Solver(SolverConfig(...)).serve(max_n=..., "
             "slots=...)", DeprecationWarning, stacklevel=2)
         self._init(max_n=max_n, slots=slots, num_lanes=num_lanes,
-                   steps_per_round=steps_per_round, backend=backend)
+                   steps_per_round=steps_per_round, backend=backend,
+                   scheduler=scheduler)
 
     @classmethod
     def from_config(cls, config, *, max_n: int, slots: int,
                     on_event: Optional[Callable[[Any], None]] = None
                     ) -> "SolverService":
-        """The facade constructor: lanes / steps_per_round / backend come
-        from a :class:`repro.solver.SolverConfig`."""
+        """The facade constructor: lanes / steps_per_round / backend /
+        scheduler come from a :class:`repro.solver.SolverConfig`."""
         return cls._create(max_n=max_n, slots=slots,
                            num_lanes=config.lanes,
                            steps_per_round=config.steps_per_round,
-                           backend=config.backend, on_event=on_event)
+                           backend=config.backend,
+                           scheduler=config.scheduler, on_event=on_event)
 
     @classmethod
     def _create(cls, **kwargs) -> "SolverService":
@@ -119,6 +139,7 @@ class SolverService:
 
     def _init(self, *, max_n: int, slots: int, num_lanes: int,
               steps_per_round: int = 64, backend: str = "jnp",
+              scheduler: Union[str, SchedulingPolicy] = "priority",
               on_event: Optional[Callable[[Any], None]] = None):
         self.spec = StackedSpec(n=max_n, k=slots)
         self.num_lanes = num_lanes
@@ -145,10 +166,13 @@ class SolverService:
         self.lanes = lanes._replace(
             inst=jnp.full((num_lanes,), NO_INSTANCE, jnp.int32))
 
-        self.queue: Deque[SolveRequest] = deque()
+        policy = (scheduler if not isinstance(scheduler, str)
+                  else make_policy(scheduler))
+        self.sched = Scheduler(policy)
         self.slot_rid: List[int] = [-1] * slots          # -1 = free slot
         self.slot_admitted: List[int] = [0] * slots
-        self.results: Dict[int, RequestResult] = {}
+        self._slot_best_seen: List[int] = [int(INF_VALUE)] * slots
+        self.results: Dict[int, RequestResult] = _ResultMap()
         self.pool: List[ckpt.PendingTask] = []
         self.rounds = 0
 
@@ -163,32 +187,81 @@ class SolverService:
     def _touch_tables(self) -> None:
         self._tables_dev = None
 
-    # -- admission / lane placement ----------------------------------------
+    # -- the ticketed front door -------------------------------------------
 
-    def submit(self, request: SolveRequest) -> int:
-        """Queue a request after full admission validation.
+    @property
+    def queue(self) -> Tuple[SolveRequest, ...]:
+        """Queued (not yet admitted) requests, in pop order."""
+        return tuple(item.request for item in self.sched.pending())
+
+    @property
+    def tickets(self) -> Dict[int, Ticket]:
+        """Every ticket this service has issued, by rid."""
+        return self.sched.tickets
+
+    def submit(self, request: SolveRequest) -> Ticket:
+        """Queue a request after full admission validation; returns its
+        :class:`~repro.service.ticket.Ticket`.
 
         Any registered family with service packing is admissible — there is
         no per-family name table here; new families become servable the
         moment their ``@register_problem`` call supplies ``pack`` +
-        ``family_id``.  Raises :class:`AdmissionError` (never a deep
-        packing failure) for anything the service can never run.
+        ``family_id``.  Anything the service can never run raises
+        :class:`AdmissionError` (never a deep packing failure), after a
+        ``reject`` ProgressEvent so observers see refusals too.
         """
+        reason = None
         try:
             spec = registry.get(request.family)
         except registry.UnknownProblemError as e:
-            raise AdmissionError(str(e)) from None
-        if not spec.servable:
-            raise AdmissionError(
-                f"problem family {request.family!r} is registered but not "
-                f"servable (no service packing in its @register_problem "
-                f"call)")
-        n = spec.size(request.graph)
-        if n > self.spec.n:
-            raise AdmissionError(
-                f"request n={n} exceeds service max_n={self.spec.n}")
-        self.queue.append(request)
-        return request.rid
+            reason = str(e)
+        else:
+            n = spec.size(request.graph)
+            if not spec.servable:
+                reason = (f"problem family {request.family!r} is registered "
+                          f"but not servable (no service packing in its "
+                          f"@register_problem call)")
+            elif n > self.spec.n:
+                reason = (f"request n={n} exceeds service "
+                          f"max_n={self.spec.n}")
+            elif (request.rid in self.sched.tickets
+                  or request.rid in self.slot_rid
+                  or request.rid in self.results):
+                # slot_rid/results cover in-flight and finished rids from
+                # pre-ticket checkpoints, which carry no ticket table.
+                reason = f"duplicate request id {request.rid}"
+            elif (request.deadline_rounds is not None
+                  and request.deadline_rounds < 1):
+                reason = (f"deadline_rounds must be >= 1, got "
+                          f"{request.deadline_rounds}")
+            elif request.node_budget is not None and request.node_budget < 1:
+                reason = f"node_budget must be >= 1, got {request.node_budget}"
+        if reason is not None:
+            self._emit("reject", rid=request.rid, reason=reason)
+            raise AdmissionError(reason)
+        return self.sched.enqueue(request, now_round=self.rounds,
+                                  service=self)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` (the ``Ticket.cancel`` implementation).
+
+        QUEUED: removed from the admission queue.  RUNNING: the slot is
+        freed and its lanes reclaimed immediately — within one round — and
+        the best-so-far is recorded as an anytime result.  Returns False
+        for unknown or already-terminal rids.
+        """
+        ticket = self.sched.tickets.get(rid)
+        if ticket is None or ticket.status in TERMINAL:
+            return False
+        best = None
+        if ticket.status is TicketStatus.QUEUED:
+            self.sched.remove_queued(rid)
+        else:
+            result = self._evict_slot(self.slot_rid.index(rid), "cancelled")
+            best = result.optimum
+        self.sched.resolve(rid, TicketStatus.CANCELLED, self.rounds)
+        self._emit("cancel", rid=rid, best=best)
+        return True
 
     def _emit(self, kind: str, **kw) -> None:
         if self.on_event is not None:
@@ -210,12 +283,14 @@ class SolverService:
     def _admit_and_place(self) -> bool:
         """Admit queued requests into free slots and (re)target idle lanes.
 
-        Returns True when lane control state changed (stacks need replay).
+        Admission ORDER is the scheduling policy's (priority heap by
+        default); this method only supplies the mechanics.  Returns True
+        when lane control state changed (stacks need replay).
         """
         # Steady-state fast path: nothing to drain/admit and every idle
         # lane already points at its round-robin live slot — skip the full
         # host round-trip (only ``active``/``inst`` are needed to decide).
-        if not self.pool and not (self.queue
+        if not self.pool and not (len(self.sched)
                                   and any(r < 0 for r in self.slot_rid)):
             active = np.asarray(self.lanes.active)
             inst = np.asarray(self.lanes.inst)
@@ -244,11 +319,14 @@ class SolverService:
             h["t_s"][lane] += 1
             changed = True
 
-        # Admission: one free slot + one idle lane per queued request.
+        # Admission: one free slot + one idle lane per popped request.
         free = [s for s in range(self.spec.k) if self.slot_rid[s] < 0]
         payload_host = None
-        while self.queue and free and idle:
-            req = self.queue.popleft()
+        while len(self.sched) and free and idle:
+            item = self.sched.pop_admission()
+            if item is None:
+                break
+            req = item.request
             slot = free.pop(0)
             lane = idle.pop(0)
             # Family-oblivious packing: the registered spec carries the
@@ -261,6 +339,11 @@ class SolverService:
             self._touch_tables()
             self.slot_rid[slot] = req.rid
             self.slot_admitted[slot] = self.rounds
+            self._slot_best_seen[slot] = int(INF_VALUE)
+            ticket = self.sched.tickets.get(req.rid)
+            if ticket is not None:
+                ticket.status = TicketStatus.RUNNING
+                ticket.admitted_round = self.rounds
             # Reset the slot incumbent, seed the root on the chosen lane.
             h["best"][slot] = int(INF_VALUE)
             if payload_host is None:
@@ -302,7 +385,7 @@ class SolverService:
             self.lanes = self._rebuild(self.lanes, self._tables_jnp())
         return changed
 
-    # -- retirement ---------------------------------------------------------
+    # -- retirement / eviction ----------------------------------------------
 
     def _retire(self, open_vec: np.ndarray) -> None:
         h_inst = None
@@ -320,6 +403,7 @@ class SolverService:
                 payload=payload,
                 admitted_round=self.slot_admitted[slot],
                 retired_round=self.rounds)
+            self.sched.resolve(rid, TicketStatus.DONE, self.rounds)
             self._emit("retire", rid=rid, best=self.results[rid].optimum)
             self.slot_rid[slot] = -1
             # Unbind the retired slot's (now idle) lanes.
@@ -329,28 +413,104 @@ class SolverService:
         if h_inst is not None:
             self.lanes = self.lanes._replace(inst=jnp.asarray(h_inst))
 
+    def _evict_slot(self, slot: int, status: str) -> RequestResult:
+        """Free a slot mid-flight: record the best-so-far as an anytime
+        result, then reclaim its lanes through the retire path's unbinding
+        — extended to still-active lanes, which are deactivated (their
+        subtrees are abandoned with the request) — and drop its
+        pending-pool tasks.  The slot is reusable by the very next
+        admission, i.e. eviction frees capacity within one round."""
+        rid = self.slot_rid[slot]
+        payload = jax.tree_util.tree_map(
+            lambda p: np.asarray(p[slot]).copy(), self.lanes.best_payload)
+        result = RequestResult(
+            rid=rid,
+            optimum=int(np.asarray(self.lanes.best)[slot]),
+            payload=payload,
+            admitted_round=self.slot_admitted[slot],
+            retired_round=self.rounds,
+            status=status)
+        self.results[rid] = result
+        self.slot_rid[slot] = -1
+        inst = np.asarray(self.lanes.inst).copy()
+        active = np.asarray(self.lanes.active).copy()
+        mine = inst == slot
+        active[mine] = False
+        inst[mine] = NO_INSTANCE
+        self.lanes = self.lanes._replace(inst=jnp.asarray(inst),
+                                         active=jnp.asarray(active))
+        self.pool = [t for t in self.pool if t.inst != slot]
+        return result
+
+    def _expire(self) -> None:
+        """End-of-round deadline/budget sweep (the scheduler decides WHO,
+        this method does the surgery)."""
+        queued, running = self.sched.overdue(self.rounds)
+        for rid in queued:
+            self.sched.remove_queued(rid)
+            self.sched.resolve(rid, TicketStatus.EXPIRED, self.rounds)
+            # Never admitted: the anytime result is the empty incumbent.
+            self.results[rid] = RequestResult(
+                rid=rid, optimum=int(INF_VALUE),
+                payload=jax.tree_util.tree_map(
+                    lambda p: np.zeros_like(np.asarray(p)[0]),
+                    self.lanes.best_payload),
+                admitted_round=-1, retired_round=self.rounds,
+                status="expired")
+            self._emit("expire", rid=rid)
+        for rid in running:
+            result = self._evict_slot(self.slot_rid.index(rid), "expired")
+            self.sched.resolve(rid, TicketStatus.EXPIRED, self.rounds)
+            self._emit("expire", rid=rid, best=result.optimum)
+
+    def _emit_incumbents(self) -> None:
+        """Per-request anytime incumbent stream: one ``incumbent`` event
+        each time a slot's bound improves.  Only costs the device readback
+        when someone is listening."""
+        if self.on_event is None:
+            return
+        best = np.asarray(self.lanes.best)
+        for slot in range(self.spec.k):
+            rid = self.slot_rid[slot]
+            if rid >= 0 and int(best[slot]) < self._slot_best_seen[slot]:
+                self._slot_best_seen[slot] = int(best[slot])
+                self._emit("incumbent", rid=rid, best=int(best[slot]))
+
     # -- the service loop ---------------------------------------------------
 
     def _has_work(self) -> bool:
-        return (bool(self.queue) or bool(self.pool)
+        return (len(self.sched) > 0 or bool(self.pool)
                 or any(r >= 0 for r in self.slot_rid))
 
     def step_round(self) -> np.ndarray:
-        """One service cycle: admit → round → retire.  Returns open-work."""
+        """One service cycle: admit → round → retire → evict.
+        Returns the per-slot open-work vector."""
+        track = self.sched.track_nodes()
         self._admit_and_place()
+        nodes_before = np.asarray(self.lanes.nodes).copy() if track else None
         lanes, open_vec = self._round(self.lanes, self._tables_jnp())
         self.lanes = lanes
         self.rounds += 1
         open_np = np.asarray(open_vec)
+        if track:
+            # Round-granular attribution: a lane's node delta this round is
+            # charged to the instance it serves at the round boundary.
+            delta = np.asarray(self.lanes.nodes) - nodes_before
+            inst = np.asarray(self.lanes.inst)
+            for slot in range(self.spec.k):
+                rid = self.slot_rid[slot]
+                if rid >= 0:
+                    used = int(delta[inst == slot].sum())
+                    if used:
+                        self.sched.note_nodes(rid, used)
         self._emit("round", open_work=int(open_np.sum()))
+        self._emit_incumbents()
         self._retire(open_np)
+        self._expire()
         return open_np
 
-    def run(self, requests: Optional[List[SolveRequest]] = None,
-            max_rounds: int = 100000) -> Dict[int, RequestResult]:
-        """Drain: admit ``requests`` plus anything queued, solve them all."""
-        for r in requests or []:
-            self.submit(r)
+    def drain(self, max_rounds: int = 100000) -> Dict[int, RequestResult]:
+        """Step rounds until every submitted request is terminal."""
         start = self.rounds
         while self._has_work():
             if self.rounds - start >= max_rounds:
@@ -360,10 +520,38 @@ class SolverService:
             self.step_round()
         return self.results
 
+    def run(self, requests: Optional[List[SolveRequest]] = None,
+            max_rounds: int = 100000) -> Dict[int, RequestResult]:
+        """Deprecated batch-era drain: admit ``requests`` plus anything
+        queued, solve them all.  ``submit()`` now returns a Ticket — use
+        ``Ticket.result()`` per request or :meth:`drain` for the pool.
+        Bitwise-identical to the ticketed path on the default policy."""
+        warnings.warn(
+            "SolverService.run() is deprecated; submit() returns a Ticket "
+            "— use Ticket.result(), or SolverService.drain()",
+            DeprecationWarning, stacklevel=2)
+        for r in requests or []:
+            self.submit(r)
+        return self.drain(max_rounds)
+
     # -- elastic checkpoint -------------------------------------------------
 
     def save(self, path: str) -> None:
-        """Persist lanes + slot tables + pending pool in one atomic file."""
+        """Persist lanes + slot tables + pending pool + the queued-request
+        heap + ticket states in one atomic file.
+
+        An un-drained service round-trips: queued (never-admitted)
+        requests are stored with their graphs and admission sequence
+        numbers so the restored policy heap pops in the saved order, and
+        every ticket's lifecycle state (status, deadlines, budgets, node
+        usage) is carried in a JSON sidecar array
+        (``repro.core.checkpoint.pack_json``).
+
+        Queued-instance persistence assumes graph-shaped instances (the
+        same assumption the stacked tables themselves make — ``pack``
+        returns adjacency rows); a future non-graph servable family needs
+        a registry-provided encode/decode hook here.
+        """
         pool_n = len(self.pool)
         il = self.lanes.idx.shape[1]
         pool_idx = np.full((pool_n, il), int(UNVISITED), np.int8)
@@ -372,6 +560,43 @@ class SolverService:
             width = min(il, t.idx.shape[0])
             pool_idx[i, :width] = t.idx[:width]
             pool_meta[i] = (t.depth, t.base, t.inst)
+
+        pending = self.sched.pending()
+        queue_adj = np.zeros((len(pending), self.spec.n,
+                              num_words(self.spec.n)), np.uint32)
+        queue_meta = []
+        for i, item in enumerate(pending):
+            g = item.request.graph
+            queue_adj[i, :g.n, :g.words] = g.adj
+            queue_meta.append({
+                "rid": item.request.rid, "family": item.request.family,
+                "name": g.name, "n": g.n, "seq": item.seq,
+                "priority": item.request.priority,
+                "deadline_rounds": item.request.deadline_rounds,
+                "node_budget": item.request.node_budget,
+            })
+        done = sorted(self.results.values(), key=lambda r: r.rid)
+        result_payload = (np.stack([np.asarray(r.payload) for r in done])
+                          if done else np.zeros((0,), np.uint32))
+        sched_meta = {
+            "scheduler": self.sched.policy.name,
+            "seq": self.sched.seq,
+            "queue": queue_meta,
+            "tickets": [{
+                "rid": t.rid, "status": t.status.value,
+                "priority": t.priority, "deadline_round": t.deadline_round,
+                "node_budget": t.node_budget,
+                "submitted_round": t.submitted_round,
+                "admitted_round": t.admitted_round,
+                "finished_round": t.finished_round,
+                "nodes_used": t.nodes_used,
+            } for t in self.sched.tickets.values()],
+            "results": [{
+                "rid": r.rid, "optimum": r.optimum,
+                "admitted_round": r.admitted_round,
+                "retired_round": r.retired_round, "status": r.status,
+            } for r in done],
+        }
         extra = {
             "adj": self.tables.adj, "fullm": self.tables.fullm,
             "family": self.tables.family,
@@ -379,28 +604,42 @@ class SolverService:
             "slot_admitted": np.asarray(self.slot_admitted, np.int32),
             "spec": np.asarray([self.spec.n, self.spec.k], np.int32),
             "rounds": np.asarray(self.rounds, np.int32),
+            "slot_best_seen": np.asarray(self._slot_best_seen, np.int32),
             "pool_idx": pool_idx, "pool_meta": pool_meta,
+            "queue_adj": queue_adj,
+            "result_payload": result_payload,
+            "sched_meta": ckpt.pack_json(sched_meta),
         }
         ckpt.save(path, self.lanes, extra=extra)
 
     @classmethod
     def restore(cls, path: str, *, num_lanes: int,
-                steps_per_round: int = 64,
-                backend: str = "jnp") -> "SolverService":
+                steps_per_round: int = 64, backend: str = "jnp",
+                scheduler: Optional[Union[str, SchedulingPolicy]] = None
+                ) -> "SolverService":
         """Rebuild the service onto ``num_lanes`` lanes (elastic W' ≠ W).
 
         Surplus in-flight tasks wait in the pending pool and are installed
-        as lanes free up; unstarted queued requests are NOT persisted —
-        resubmit them.  Results for slots still in flight are produced
-        under the same rids recorded at save time.  ``backend`` (like
-        ``num_lanes``) is an execution choice, not checkpoint state: a
-        service saved under one backend restores under any other with a
-        bitwise-identical search (DESIGN.md §5.3).
+        as lanes free up.  Queued (never-admitted) requests ARE persisted
+        with their admission sequence, so the restored policy heap pops in
+        the saved order; every ticket's state (including terminal ones)
+        round-trips, with restored tickets re-bound to the new service.
+        ``backend`` (like ``num_lanes``) is an execution choice, not
+        checkpoint state: a service saved under one backend restores under
+        any other with a bitwise-identical search (DESIGN.md §5.3), and
+        ``scheduler`` defaults to the checkpointed policy but may be
+        overridden — the queue is re-pushed through the new policy.
         """
         extra = ckpt.read_extra(path)
         n, k = (int(x) for x in extra["spec"])
+        meta = (ckpt.unpack_json(extra["sched_meta"])
+                if "sched_meta" in extra else
+                {"scheduler": "priority", "seq": 0, "queue": [],
+                 "tickets": [], "results": []})
         svc = cls._create(max_n=n, slots=k, num_lanes=num_lanes,
-                          steps_per_round=steps_per_round, backend=backend)
+                          steps_per_round=steps_per_round, backend=backend,
+                          scheduler=(meta["scheduler"] if scheduler is None
+                                     else scheduler))
         svc.tables = StackedTables(
             adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
             family=extra["family"].copy())
@@ -414,6 +653,36 @@ class SolverService:
         svc.slot_rid = [int(r) for r in extra["slot_rid"]]
         svc.slot_admitted = [int(r) for r in extra["slot_admitted"]]
         svc.rounds = int(extra["rounds"])
+        if "slot_best_seen" in extra:     # keep the incumbent stream exact
+            svc._slot_best_seen = [int(b) for b in extra["slot_best_seen"]]
+
+        for t in meta["tickets"]:
+            svc.sched.adopt(Ticket(
+                rid=t["rid"], priority=t["priority"],
+                deadline_round=t["deadline_round"],
+                node_budget=t["node_budget"],
+                status=TicketStatus(t["status"]),
+                submitted_round=t["submitted_round"],
+                admitted_round=t["admitted_round"],
+                finished_round=t["finished_round"],
+                nodes_used=t["nodes_used"], _service=svc))
+        for i, q in enumerate(meta["queue"]):
+            graph = Graph(n=q["n"],
+                          adj=extra["queue_adj"][i, :q["n"],
+                                                 :num_words(q["n"])].copy(),
+                          name=q["name"])
+            svc.sched.policy.push(QueueItem(q["seq"], SolveRequest(
+                rid=q["rid"], graph=graph, family=q["family"],
+                priority=q["priority"],
+                deadline_rounds=q["deadline_rounds"],
+                node_budget=q["node_budget"])))
+        svc.sched.seq = int(meta["seq"])
+        for i, r in enumerate(meta["results"]):
+            svc.results[r["rid"]] = RequestResult(
+                rid=r["rid"], optimum=r["optimum"],
+                payload=extra["result_payload"][i].copy(),
+                admitted_round=r["admitted_round"],
+                retired_round=r["retired_round"], status=r["status"])
         return svc
 
 

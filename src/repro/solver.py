@@ -81,6 +81,10 @@ class SolverConfig:
         (``checkpoint_every > 0`` requires a path).
       resume_from: checkpoint to restore before solving (elastic: any lane
         count; the instance-slot count must match the problem).
+      scheduler: service admission policy name ("priority" | "sjf" |
+        "fifo" — ``repro.service.scheduler.SCHEDULERS``), validated
+        against the registered policies when the config meets
+        :meth:`Solver.serve`.
     """
 
     lanes: int = 32
@@ -94,6 +98,7 @@ class SolverConfig:
     checkpoint_every: int = 0
     checkpoint_path: Optional[str] = None
     resume_from: Optional[str] = None
+    scheduler: str = "priority"
 
     def __post_init__(self):
         if self.lanes < 1:
@@ -115,6 +120,9 @@ class SolverConfig:
                 "checkpoint_every > 0 requires checkpoint_path")
         if not isinstance(self.backend, str) or not self.backend:
             raise ConfigError(f"backend must be a name, got {self.backend!r}")
+        if not isinstance(self.scheduler, str) or not self.scheduler:
+            raise ConfigError(
+                f"scheduler must be a policy name, got {self.scheduler!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,8 +134,16 @@ class ProgressEvent:
                      ``best``; solve rounds also carry ``lanes``);
       "checkpoint" — a checkpoint was written (``path``);
       "admit"      — the service admitted request ``rid`` into a slot;
+      "incumbent"  — request ``rid``'s anytime incumbent improved to
+                     ``best`` (the service's per-request progress stream);
       "retire"     — the service retired request ``rid`` (``best`` is its
                      optimum);
+      "reject"     — ``submit()`` refused request ``rid`` (``reason``;
+                     emitted just before the AdmissionError is raised);
+      "cancel"     — request ``rid`` was cancelled (``best`` is the anytime
+                     incumbent if it ever ran);
+      "expire"     — request ``rid`` hit its deadline or node budget and
+                     was evicted with ``best`` as its anytime result;
       "done"       — the solve drained (``best`` is the global optimum).
     """
 
@@ -137,6 +153,7 @@ class ProgressEvent:
     best: Optional[int] = None
     rid: Optional[int] = None
     path: Optional[str] = None
+    reason: Optional[str] = None
     lanes: Optional[Lanes] = None
 
 
@@ -315,12 +332,18 @@ class Solver:
     # -- the multi-tenant service -------------------------------------------
 
     def serve(self, *, max_n: int, slots: int):
-        """A :class:`repro.service.SolverService` under this session's
-        config (lanes, steps_per_round, backend) and event stream.
+        """The session-flavored :class:`repro.service.SolverService` under
+        this config (lanes, steps_per_round, backend, scheduler) and event
+        stream.
 
-        Any registered *servable* family (``ProblemSpec.servable``) can be
-        submitted; admission is validated at ``submit()`` time (typed
-        :class:`repro.service.AdmissionError`).
+        Its ``submit()`` returns a :class:`repro.service.Ticket` — the
+        future-like request handle with ``status`` / ``result(timeout=)``
+        / ``cancel()`` (DESIGN.md §7); requests carry ``priority``,
+        ``deadline_rounds`` and ``node_budget``, and admission order is
+        the config's ``scheduler`` policy.  Any registered *servable*
+        family (``ProblemSpec.servable``) can be submitted; admission is
+        validated at ``submit()`` time (typed
+        :class:`repro.service.AdmissionError`, after a ``reject`` event).
 
         The service driver has its own checkpoint surface
         (``SolverService.save`` / ``.restore``) and runs single-device, so
@@ -329,11 +352,16 @@ class Solver:
         """
         from repro.service.batch_problem import STACKED_BACKENDS
         from repro.service.driver import SolverService
+        from repro.service.scheduler import SCHEDULERS
 
         if self.config.backend not in STACKED_BACKENDS:
             raise ConfigError(
                 f"backend {self.config.backend!r} is not supported by the "
                 f"stacked service (supports: {', '.join(STACKED_BACKENDS)})")
+        if self.config.scheduler not in SCHEDULERS:
+            raise ConfigError(
+                f"unknown scheduler {self.config.scheduler!r} (registered "
+                f"policies: {', '.join(sorted(SCHEDULERS))})")
         unsupported = [
             name for name, is_set in (
                 ("mesh", self.config.mesh is not None),

@@ -71,7 +71,9 @@ def assert_valid_payload(family, graph, payload, optimum):
 def run_requests(svc):
     reqs = [SolveRequest(rid=i, graph=g, family=f)
             for i, (f, g) in enumerate(MIX)]
-    return reqs, svc.run(reqs)
+    for r in reqs:
+        svc.submit(r)
+    return reqs, svc.drain()
 
 
 @pytest.mark.parametrize("lanes", [8, 32])
@@ -155,7 +157,7 @@ def test_service_backend_crosses_checkpoints(tmp_path):
 
     svc2 = SolverService.restore(path, num_lanes=8, steps_per_round=16,
                                  backend="pallas")
-    results = svc2.run()
+    results = svc2.drain()
     for i, (family, graph) in enumerate(MIX):
         assert results[i].optimum == ORACLES[i], (i, family, graph.name)
 
@@ -177,7 +179,7 @@ def test_service_elastic_restore_midrun(w_before, w_after, tmp_path):
 
     svc2 = SolverService.restore(path, num_lanes=w_after,
                                  steps_per_round=16)
-    results = svc2.run()
+    results = svc2.drain()
     for i, (family, graph) in enumerate(MIX):
         assert results[i].optimum == ORACLES[i], (i, family, graph.name)
         assert_valid_payload(family, graph, results[i].payload,
@@ -191,7 +193,9 @@ def test_service_continuous_batching_reuses_slots():
     reqs = [SolveRequest(rid=100 + i, graph=g, family=f)
             for i, (f, g) in enumerate(MIX * 2)]
     svc = SolverService(max_n=18, slots=2, num_lanes=8, steps_per_round=16)
-    results = svc.run(reqs)
+    for r in reqs:
+        svc.submit(r)
+    results = svc.drain()
     for i, (family, graph) in enumerate(MIX * 2):
         assert results[100 + i].optimum == ORACLES[i % len(MIX)]
 

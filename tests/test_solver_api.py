@@ -104,6 +104,9 @@ def test_legacy_solve_warns_and_matches_facade():
 
 
 def test_legacy_service_warns_and_matches_facade():
+    """The batch-era surface (``run()`` + int-rid tickets) stays a
+    DeprecationWarning shim over the ticketed path, bitwise-identical on
+    the default policy at equal priorities."""
     mix = [("vc", gnp_graph(12, 0.3, seed=9)),
            ("ds", gnp_graph(14, 0.25, seed=2))]
     reqs = [SolveRequest(rid=i, graph=g, family=f)
@@ -111,14 +114,20 @@ def test_legacy_service_warns_and_matches_facade():
     with pytest.warns(DeprecationWarning, match="serve"):
         legacy = SolverService(max_n=14, slots=2, num_lanes=8,
                                steps_per_round=16)
-    old = legacy.run(list(reqs))
-    new = Solver(SolverConfig(lanes=8, steps_per_round=16)).serve(
-        max_n=14, slots=2).run(list(reqs))
+    with pytest.warns(DeprecationWarning, match="Ticket"):
+        old = legacy.run(list(reqs))
+    svc = Solver(SolverConfig(lanes=8, steps_per_round=16)).serve(
+        max_n=14, slots=2)
+    tickets = [svc.submit(r) for r in reqs]
+    with pytest.warns(DeprecationWarning, match="int rid"):
+        assert [int(t) for t in tickets] == [r.rid for r in reqs]
+    new = svc.drain()
     for i in range(len(mix)):
         assert old[i].optimum == new[i].optimum
         np.testing.assert_array_equal(old[i].payload, new[i].payload)
         assert (old[i].admitted_round, old[i].retired_round) == \
                (new[i].admitted_round, new[i].retired_round)
+        assert new[tickets[i]].optimum == new[i].optimum  # int-rid lookup
 
 
 def test_legacy_on_round_still_fires_through_event_stream():
@@ -159,8 +168,9 @@ def test_service_event_stream_admit_retire():
     events = []
     svc = Solver(SolverConfig(lanes=8, steps_per_round=16),
                  on_event=events.append).serve(max_n=14, slots=2)
-    svc.run([SolveRequest(rid=7, graph=gnp_graph(12, 0.3, seed=9),
-                          family="vc")])
+    svc.submit(SolveRequest(rid=7, graph=gnp_graph(12, 0.3, seed=9),
+                            family="vc"))
+    svc.drain()
     kinds = [e.kind for e in events]
     assert "admit" in kinds and "retire" in kinds and "round" in kinds
     retire = [e for e in events if e.kind == "retire"][0]

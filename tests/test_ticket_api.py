@@ -1,0 +1,352 @@
+"""ISSUE 5 acceptance tests: the ticketed request-lifecycle API.
+
+Covers (a) the Ticket future surface (status machine, ``result(timeout=)``,
+``cancel()`` freeing the slot within one round), (b) the pluggable
+scheduling policies (PriorityFifo admission order, ShortestJobFirst keyed
+on registered ``size()``, Fifo baseline), (c) deadline / node-budget
+eviction with anytime results, (d) the new ProgressEvent kinds
+(``incumbent``, ``reject``, ``cancel``, ``expire``), and (e) save/restore
+round-tripping an un-drained service: queued (never-admitted) requests and
+ticket states — including a cancelled ticket — must match after restore.
+"""
+
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.problems import gnp_graph
+from repro.service import (AdmissionError, Fifo, PriorityFifo, SolveRequest,
+                           SolverService, Ticket, TicketCancelled,
+                           TicketStatus, make_policy)
+from repro.service.scheduler import QueueItem
+from repro.solver import ConfigError, Solver, SolverConfig
+
+HARD = gnp_graph(18, 0.30, seed=7)            # needs many rounds at small R
+EASY = [gnp_graph(12, 0.30, seed=9), gnp_graph(13, 0.30, seed=4),
+        gnp_graph(14, 0.25, seed=2)]
+
+
+def oracle(family, graph):
+    return Solver().oracle(registry.problem(family, graph)).best
+
+
+def serve(slots=1, steps=4, lanes=8, scheduler="priority", on_event=None):
+    solver = Solver(SolverConfig(lanes=lanes, steps_per_round=steps,
+                                 scheduler=scheduler), on_event=on_event)
+    return solver.serve(max_n=18, slots=slots)
+
+
+# -- the Ticket future --------------------------------------------------------
+
+
+def test_submit_returns_resolving_ticket():
+    svc = serve(steps=16)
+    t = svc.submit(SolveRequest(rid=0, graph=EASY[0], family="vc"))
+    assert isinstance(t, Ticket)
+    assert t.status is TicketStatus.QUEUED and not t.done()
+    res = t.result()
+    assert t.status is TicketStatus.DONE and t.done()
+    assert res.status == "done"
+    assert res.optimum == oracle("vc", EASY[0])
+    assert t.admitted_round is not None and t.finished_round is not None
+    assert res.rid == 0
+
+
+def test_result_timeout_raises():
+    svc = serve(steps=1, lanes=4)
+    t = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc"))
+    with pytest.raises(TimeoutError, match="unresolved"):
+        t.result(timeout=0.0)
+    assert t.status in (TicketStatus.QUEUED, TicketStatus.RUNNING)
+    assert t.result().optimum == oracle("vc", HARD)   # still resolvable
+
+
+def test_cancel_queued_ticket():
+    svc = serve(slots=1)
+    running = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc",
+                                      priority=9))
+    queued = svc.submit(SolveRequest(rid=1, graph=EASY[0], family="vc"))
+    svc.step_round()
+    assert queued.status is TicketStatus.QUEUED
+    assert queued.cancel()
+    assert queued.status is TicketStatus.CANCELLED
+    assert not svc.queue                       # removed from the policy heap
+    assert not queued.cancel()                 # already terminal: no-op
+    with pytest.raises(TicketCancelled):
+        queued.result()
+    assert running.result().optimum == oracle("vc", HARD)
+    assert 1 not in svc.results                # never ran: no anytime result
+
+
+def test_cancelled_queued_requests_compact_from_the_heap():
+    """Dead heap entries (cancelled while queued, never popped under a
+    priority policy) must not accumulate — the policy compacts once they
+    dominate."""
+    svc = serve(slots=1)
+    svc.submit(SolveRequest(rid=0, graph=HARD, family="vc", priority=9))
+    tickets = [svc.submit(SolveRequest(rid=i, graph=EASY[i % 3],
+                                       family="vc"))
+               for i in range(1, 20)]
+    svc.step_round()
+    for t in tickets[:15]:
+        assert t.cancel()
+    live = [r.rid for r in svc.queue]
+    assert live == [16, 17, 18, 19]
+    # Dead entries are compacted away once they dominate (small heaps are
+    # left alone): the heap stays O(live), not O(everything ever queued).
+    assert len(svc.sched.policy._heap) <= 8
+    results = svc.drain()
+    for rid in live:
+        assert results[rid].status == "done"
+
+
+def test_cancel_running_frees_slot_within_one_round():
+    svc = serve(slots=1)
+    t = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc"))
+    svc.step_round()
+    assert t.status is TicketStatus.RUNNING and svc.slot_rid == [0]
+    assert t.cancel()
+    # The slot and its lanes are reclaimed immediately, not at some later
+    # drain: no extra round needed.
+    assert t.status is TicketStatus.CANCELLED
+    assert svc.slot_rid == [-1]
+    assert not np.asarray(svc.lanes.active).any()
+    assert (np.asarray(svc.lanes.inst) == -1).all()
+    # Best-so-far is recorded as an anytime result; result() still raises.
+    assert svc.results[0].status == "cancelled"
+    with pytest.raises(TicketCancelled):
+        t.result()
+    # The freed slot serves the next request exactly.
+    nxt = svc.submit(SolveRequest(rid=1, graph=EASY[0], family="vc"))
+    assert nxt.result().optimum == oracle("vc", EASY[0])
+
+
+def test_deadline_eviction_frees_slot_and_keeps_anytime():
+    svc = serve(slots=1, steps=2, lanes=4)
+    t = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc",
+                                deadline_rounds=2))
+    svc.step_round()
+    assert t.status is TicketStatus.RUNNING
+    svc.step_round()                 # the deadline round: evicted at its end
+    assert t.status is TicketStatus.EXPIRED
+    assert svc.slot_rid == [-1]      # freed within the deadline round itself
+    assert not np.asarray(svc.lanes.active).any()
+    res = t.result()                 # EXPIRED returns the anytime result
+    assert res.status == "expired" and res.retired_round == 2
+
+
+def test_queued_request_expires_without_running():
+    svc = serve(slots=1, steps=2, lanes=4)
+    svc.submit(SolveRequest(rid=0, graph=HARD, family="vc", priority=9))
+    starved = svc.submit(SolveRequest(rid=1, graph=EASY[0], family="vc",
+                                      deadline_rounds=2))
+    svc.step_round()
+    svc.step_round()
+    assert starved.status is TicketStatus.EXPIRED
+    res = starved.result()
+    assert res.admitted_round == -1 and res.status == "expired"
+
+
+def test_node_budget_eviction():
+    svc = serve(slots=1, steps=2, lanes=4)
+    t = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc",
+                                node_budget=3))
+    svc.step_round()
+    svc.step_round()
+    assert t.nodes_used >= 3
+    assert t.status is TicketStatus.EXPIRED and svc.slot_rid == [-1]
+    assert t.result().status == "expired"
+
+
+# -- scheduling policies ------------------------------------------------------
+
+
+def admit_order(scheduler, requests):
+    events = []
+    svc = serve(slots=1, steps=16, scheduler=scheduler,
+                on_event=events.append)
+    for r in requests:
+        svc.submit(r)
+    svc.drain()
+    return [e.rid for e in events if e.kind == "admit"]
+
+
+def test_priority_fifo_admission_order():
+    reqs = [SolveRequest(rid=0, graph=EASY[0], family="vc", priority=0),
+            SolveRequest(rid=1, graph=EASY[1], family="vc", priority=5),
+            SolveRequest(rid=2, graph=EASY[2], family="ds", priority=5)]
+    # Highest priority first; equal priorities keep submission (FIFO) order.
+    assert admit_order("priority", reqs) == [1, 2, 0]
+
+
+def test_fifo_policy_ignores_priority():
+    reqs = [SolveRequest(rid=0, graph=EASY[0], family="vc", priority=0),
+            SolveRequest(rid=1, graph=EASY[1], family="vc", priority=5)]
+    assert admit_order("fifo", reqs) == [0, 1]
+
+
+def test_shortest_job_first_keyed_on_registered_size():
+    reqs = [SolveRequest(rid=0, graph=HARD, family="vc"),
+            SolveRequest(rid=1, graph=EASY[0], family="vc"),
+            SolveRequest(rid=2, graph=EASY[2], family="ds")]
+    sizes = [registry.instance_size(r.family, r.graph) for r in reqs]
+    assert sizes == [18, 12, 14]
+    assert admit_order("sjf", reqs) == [1, 2, 0]
+
+
+def test_policies_are_pluggable_without_the_driver():
+    """Any SchedulingPolicy instance plugs into the engine directly — the
+    protocol is the whole contract (here: a custom strictly-LIFO policy)."""
+    class Lifo(Fifo):
+        name = "lifo"
+
+        def key(self, request):
+            return ()
+
+        def push(self, item):
+            super().push(QueueItem(-item.seq, item.request))
+
+    events = []
+    svc = SolverService._create(max_n=18, slots=1, num_lanes=8,
+                                steps_per_round=16, scheduler=Lifo(),
+                                on_event=events.append)
+    for i in range(3):
+        svc.submit(SolveRequest(rid=i, graph=EASY[i], family="vc"))
+    svc.drain()
+    assert [e.rid for e in events if e.kind == "admit"] == [2, 1, 0]
+
+
+def test_unknown_scheduler_is_config_error():
+    with pytest.raises(ConfigError, match="registered policies"):
+        Solver(SolverConfig(scheduler="round-robin")).serve(max_n=8, slots=1)
+    with pytest.raises(ConfigError, match="policy name"):
+        SolverConfig(scheduler="")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("round-robin")
+
+
+def test_default_policy_matches_legacy_fifo_at_equal_priorities():
+    """PriorityFifo at all-default priorities is bitwise the legacy deque:
+    same admission order, rounds and optima as the explicit Fifo policy."""
+    mix = [("vc", EASY[0]), ("ds", EASY[2]), ("vc", EASY[1]), ("vc", HARD)]
+    outcomes = []
+    for scheduler in ("priority", "fifo"):
+        svc = serve(slots=2, steps=16, scheduler=scheduler)
+        for i, (fam, g) in enumerate(mix):
+            svc.submit(SolveRequest(rid=i, graph=g, family=fam))
+        res = svc.drain()
+        outcomes.append([(res[i].optimum, res[i].admitted_round,
+                          res[i].retired_round) for i in range(len(mix))])
+    assert outcomes[0] == outcomes[1]
+
+
+# -- the new event kinds ------------------------------------------------------
+
+
+def test_reject_event_precedes_admission_error():
+    events = []
+    svc = serve(on_event=events.append)
+    with pytest.raises(AdmissionError, match="unknown problem family"):
+        svc.submit(SolveRequest(rid=3, graph=EASY[0], family="tsp"))
+    with pytest.raises(AdmissionError, match="deadline_rounds"):
+        svc.submit(SolveRequest(rid=4, graph=EASY[0], family="vc",
+                                deadline_rounds=0))
+    svc.submit(SolveRequest(rid=5, graph=EASY[0], family="vc"))
+    with pytest.raises(AdmissionError, match="duplicate"):
+        svc.submit(SolveRequest(rid=5, graph=EASY[1], family="vc"))
+    rejects = [e for e in events if e.kind == "reject"]
+    assert [e.rid for e in rejects] == [3, 4, 5]
+    assert all(e.reason for e in rejects)
+
+
+def test_incumbent_stream_is_per_request_and_monotone():
+    events = []
+    svc = serve(slots=2, steps=4, on_event=events.append)
+    a = svc.submit(SolveRequest(rid=0, graph=EASY[0], family="vc"))
+    b = svc.submit(SolveRequest(rid=1, graph=EASY[2], family="ds"))
+    svc.drain()
+    for t, rid in ((a, 0), (b, 1)):
+        incs = [e.best for e in events if e.kind == "incumbent"
+                and e.rid == rid]
+        assert incs, rid
+        assert incs == sorted(incs, reverse=True)       # anytime: improving
+        assert incs[-1] == svc.results[rid].optimum
+
+
+def test_cancel_and_expire_events():
+    events = []
+    svc = serve(slots=2, steps=2, lanes=4, on_event=events.append)
+    dead = svc.submit(SolveRequest(rid=0, graph=HARD, family="vc",
+                                   deadline_rounds=1))
+    gone = svc.submit(SolveRequest(rid=1, graph=HARD, family="vc"))
+    svc.step_round()
+    gone.cancel()
+    assert dead.status is TicketStatus.EXPIRED
+    expire = [e for e in events if e.kind == "expire"]
+    cancel = [e for e in events if e.kind == "cancel"]
+    assert [e.rid for e in expire] == [0]
+    assert [e.rid for e in cancel] == [1]
+
+
+# -- checkpointing an un-drained service --------------------------------------
+
+
+def test_save_restore_roundtrips_queue_and_tickets(tmp_path):
+    """Mid-drain save with queued (never-admitted) requests and a cancelled
+    ticket: the restored queue must pop in the same order and every ticket
+    state must match (ISSUE 5 satellite)."""
+    svc = serve(slots=1)
+    svc.submit(SolveRequest(rid=0, graph=HARD, family="vc", priority=9))
+    svc.submit(SolveRequest(rid=1, graph=EASY[0], family="vc", priority=1))
+    svc.submit(SolveRequest(rid=2, graph=EASY[1], family="ds", priority=5,
+                            deadline_rounds=400))
+    svc.submit(SolveRequest(rid=3, graph=EASY[2], family="vc", priority=3,
+                            node_budget=50000))
+    svc.step_round()
+    svc.tickets[1].cancel()
+    assert svc.tickets[0].status is TicketStatus.RUNNING
+    path = str(tmp_path / "svc.ckpt")
+    svc.save(path)
+
+    svc2 = SolverService.restore(path, num_lanes=16, steps_per_round=8)
+    assert svc2.sched.policy.name == "priority"    # policy round-trips
+    assert [r.rid for r in svc2.queue] == [r.rid for r in svc.queue] == [2, 3]
+    for rid, t in svc.tickets.items():
+        r = svc2.tickets[rid]
+        assert (r.status, r.priority, r.deadline_round, r.node_budget,
+                r.submitted_round, r.admitted_round, r.finished_round) == \
+               (t.status, t.priority, t.deadline_round, t.node_budget,
+                t.submitted_round, t.admitted_round, t.finished_round), rid
+    results = svc2.drain()
+    for rid, fam, g in ((0, "vc", HARD), (2, "ds", EASY[1]),
+                        (3, "vc", EASY[2])):
+        assert results[rid].optimum == oracle(fam, g), rid
+    assert 1 not in results
+    assert svc2.tickets[1].status is TicketStatus.CANCELLED
+
+
+def test_save_restore_keeps_terminal_results(tmp_path):
+    """DONE results and their payloads survive: a restored ticket's
+    result() answers without re-running anything."""
+    svc = serve(slots=1, steps=16)
+    t = svc.submit(SolveRequest(rid=0, graph=EASY[0], family="vc"))
+    res = t.result()
+    path = str(tmp_path / "svc.ckpt")
+    svc.save(path)
+    svc2 = SolverService.restore(path, num_lanes=8)
+    assert svc2.tickets[0].status is TicketStatus.DONE
+    restored = svc2.tickets[0].result()
+    assert restored.optimum == res.optimum
+    np.testing.assert_array_equal(restored.payload, res.payload)
+
+
+def test_restore_can_override_policy(tmp_path):
+    svc = serve(slots=1, scheduler="fifo")
+    svc.submit(SolveRequest(rid=0, graph=EASY[0], family="vc"))
+    svc.submit(SolveRequest(rid=1, graph=EASY[1], family="vc", priority=7))
+    path = str(tmp_path / "svc.ckpt")
+    svc.save(path)
+    svc2 = SolverService.restore(path, num_lanes=8)
+    assert svc2.sched.policy.name == "fifo"
+    svc3 = SolverService.restore(path, num_lanes=8, scheduler="priority")
+    assert [r.rid for r in svc3.queue] == [1, 0]   # re-ranked by new policy

@@ -1,8 +1,9 @@
-"""Public-API surface snapshot for the front-door modules (ISSUE 4).
+"""Public-API surface snapshot for the front-door modules (ISSUE 4/5).
 
-``repro.registry`` and ``repro.solver`` are THE public API: every
-launcher, benchmark and downstream user goes through them, so their
-surface must never change silently.  This tool renders each module's
+``repro.registry``, ``repro.solver`` and ``repro.service`` (the ticketed
+request-lifecycle surface: Ticket, SchedulingPolicy, SolverService) are
+THE public API: every launcher, benchmark and downstream user goes
+through them, so their surface must never change silently.  This tool renders each module's
 ``__all__`` — dataclass fields, NamedTuple fields, class methods and
 function signatures — into a canonical text form and compares it against
 the checked-in snapshot ``tools/api_surface.txt``:
@@ -31,7 +32,7 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
-MODULES = ("repro.registry", "repro.solver")
+MODULES = ("repro.registry", "repro.solver", "repro.service")
 SNAPSHOT = pathlib.Path(__file__).resolve().parent / "api_surface.txt"
 
 
