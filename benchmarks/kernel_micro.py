@@ -10,15 +10,27 @@ shapes each kernel is exercised at, (b) ref-vs-kernel max abs error, and
 kernel-layer problem families (DESIGN.md §5.4): vertex cover (legacy
 three-callback adapter vs fused jnp vs fused+Pallas) and dominating set
 (fused jnp vs fused+Pallas), and records the trajectory in
-``BENCH_node_eval.json`` at the repo root (DESIGN.md §3/§5).  On CPU the
-Pallas variants run the kernel bodies in interpret mode, so their
-absolute numbers are correctness canaries, not speed claims.
+``BENCH_node_eval.json`` at the repo root (DESIGN.md §3/§5).  Each
+variant row carries its execution metadata — ``mode`` ("jnp" vs the
+Pallas path's "interpret"/"compiled") and, for Pallas variants, the
+autotuned ``tile``/``stages`` (DESIGN.md §5.6) — so a recorded number is
+attributable to the configuration that produced it.  On CPU the Pallas
+variants run the kernel bodies in interpret mode, so their absolute
+numbers are correctness canaries, not speed claims.
+
+``--quick`` measures a smaller shape and records it under the ``"quick"``
+subtree of the JSON (the full-size trajectory stays at top level);
+``--gate`` compares the fresh numbers against the committed baseline of
+the SAME subtree and exits non-zero on a >20% nodes/sec regression for
+any (family, variant) pair — the CI bench-smoke regression gate.  A
+failed gate does not overwrite the baseline.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +44,11 @@ from repro.kernels.bitset_degree import degree_argmax
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.problems.dominating_set import DSState
-from repro.problems.graphs import gnp_graph, full_mask
+from repro.problems.graphs import gnp_graph, full_mask, num_words
 from repro.problems.vertex_cover import VCState, make_vertex_cover_callbacks
+
+#: Gate threshold: fail on a >20% nodes/sec drop vs the committed baseline.
+GATE_REGRESSION = 0.20
 
 BENCH_JSON = os.path.normpath(os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_node_eval.json"))
@@ -164,15 +179,39 @@ def _ds_lane_states(graph, lanes: int) -> DSState:
                        axis=1).astype(np.int32)))
 
 
-def _time_variants(variants, states, lanes):
+def _time_variants(variants, states, lanes, n):
+    """Time each (name, BinaryProblem) at the engine's unit of work.
+
+    Variants carrying ``evaluate_batch`` (the Pallas problems) are timed
+    through it — one kernel launch for all lanes, exactly what the fused
+    round executes (DESIGN.md §5.5) — and annotated with the autotuned
+    ``tile``/``stages`` their launch resolves to plus the execution
+    ``mode``; plain variants go through ``vmap(evaluate)``.
+    """
+    from repro.kernels import autotune
+    pallas_mode = ("compiled" if jax.default_backend() == "tpu"
+                   else "interpret")
+    choice = autotune.choose(n, num_words(n), lanes=lanes)
+    best = jnp.full((lanes,), INF_VALUE, jnp.int32)
     out = {}
     for name, prob in variants:
-        fn = jax.jit(jax.vmap(lambda s: prob.evaluate(s, INF_VALUE)))
-        t, _ = timed(lambda: jax.block_until_ready(fn(states)))
-        out[name] = {
+        batched = prob.evaluate_batch is not None
+        if batched:
+            fn = jax.jit(lambda s, eb=prob.evaluate_batch: eb(s, best))
+        else:
+            fn = jax.jit(jax.vmap(
+                lambda s, ev=prob.evaluate: ev(s, INF_VALUE)))
+        # One batch is ~100µs — best-of-many keeps the regression gate
+        # from tripping on OS scheduling noise.
+        t, _ = timed(lambda: jax.block_until_ready(fn(states)), repeat=50)
+        entry = {
             "sec_per_batch": round(t, 6),
             "nodes_per_sec": round(lanes / t, 1),
+            "mode": pallas_mode if batched else "jnp",
         }
+        if batched:
+            entry["tile"], entry["stages"] = choice.tile, choice.stages
+        out[name] = entry
     return out
 
 
@@ -195,17 +234,38 @@ def run_node_eval(quick: bool = False) -> dict:
             ("legacy_callbacks", make_vertex_cover_callbacks(g)),
             ("fused_jnp", vc.build(g)),
             ("fused_pallas", vc.build(g, backend="pallas")),
-        ], _lane_states(g, lanes), lanes)}
+        ], _lane_states(g, lanes), lanes, n)}
     out["ds"] = {
         "instance": f"gnp:{n}:{int(p * 100)}:7",
         "variants": _time_variants([
             ("fused_jnp", ds.build(g)),
             ("fused_pallas", ds.build(g, backend="pallas")),
-        ], _ds_lane_states(g, lanes), lanes)}
+        ], _ds_lane_states(g, lanes), lanes, n)}
     return out
 
 
-def main(quick: bool = False) -> None:
+def _gate_failures(baseline: dict, fresh: dict,
+                   threshold: float = GATE_REGRESSION) -> list:
+    """(family, variant) pairs whose fresh nodes/sec regressed more than
+    ``threshold`` vs the committed baseline.  Pairs absent from the
+    baseline (new variants, first run) pass vacuously."""
+    fails = []
+    for fam in ("vc", "ds"):
+        base_vars = (baseline.get(fam) or {}).get("variants") or {}
+        new_vars = (fresh.get(fam) or {}).get("variants") or {}
+        for name, new in new_vars.items():
+            old = base_vars.get(name) or {}
+            old_nps = float(old.get("nodes_per_sec") or 0.0)
+            new_nps = float(new["nodes_per_sec"])
+            if old_nps > 0 and new_nps < (1.0 - threshold) * old_nps:
+                fails.append(
+                    f"{fam}/{name}: {new_nps:.0f} nodes/s is "
+                    f"{100 * (1 - new_nps / old_nps):.1f}% below the "
+                    f"baseline {old_nps:.0f}")
+    return fails
+
+
+def main(quick: bool = False, gate: bool = False) -> None:
     rows = run(quick)
     path = write_csv("kernel_micro.csv", rows,
                      ["kernel", "shape", "ref_ms", "max_abs_err"])
@@ -217,6 +277,8 @@ def main(quick: bool = False) -> None:
     node_eval = run_node_eval(quick)
     # Merge-write: keep any per-family entries a previous run recorded that
     # this invocation did not re-measure (mirrors BENCH_service.json).
+    # Quick runs live under their own "quick" subtree so the full-size
+    # trajectory and the CI smoke shape never overwrite each other.
     merged = {}
     if os.path.exists(BENCH_JSON):
         try:
@@ -224,16 +286,41 @@ def main(quick: bool = False) -> None:
                 merged = json.load(f)
         except ValueError:
             merged = {}
-    merged.update(node_eval)
+
+    if gate:
+        baseline = (merged.get("quick") or {}) if quick else merged
+        fails = _gate_failures(baseline, node_eval)
+        if fails:
+            for msg in fails:
+                print(f"GATE FAIL node_eval,{msg}")
+            print(f"bench gate: {len(fails)} regression(s) > "
+                  f"{int(GATE_REGRESSION * 100)}% — baseline NOT updated")
+            sys.exit(1)
+
+    if quick:
+        sub = dict(merged.get("quick") or {})
+        sub.update(node_eval)
+        merged["quick"] = sub
+    else:
+        merged.update(node_eval)
     with open(BENCH_JSON, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")
     for fam in ("vc", "ds"):
         for name, v in node_eval[fam]["variants"].items():
-            print("node_eval,%s,%s,%s,%s" % (fam, name, v["sec_per_batch"],
-                                             v["nodes_per_sec"]))
+            print("node_eval,%s,%s,%s,%s,%s" % (
+                fam, name, v["sec_per_batch"], v["nodes_per_sec"],
+                v["mode"]))
     print(f"node_eval -> {BENCH_JSON}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes; results under the 'quick' subtree")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) on a >20%% nodes/sec regression "
+                         "vs the committed baseline")
+    args = ap.parse_args()
+    main(quick=args.quick, gate=args.gate)

@@ -114,6 +114,14 @@ class BinaryProblem:
         K > 1 problems (CONVERTINDEX replay of a stolen task must start
         from the root of the task's OWN instance).  ``None`` means
         ``root()`` is instance-independent.
+      evaluate_batch: optional (states, best) -> NodeEval over a LEADING
+        lane axis — the fused-round fast path.  When set, the engine's
+        vectorized step calls it ONCE per step with all W lanes' states
+        (leaves [W, ...], best int32[W]) instead of ``vmap(evaluate)``,
+        letting a kernel backend batch every lane into one launch
+        (DESIGN.md §5.5).  MUST be bitwise-identical to
+        ``vmap(evaluate)`` — the search tree may not depend on which
+        path ran.  ``None`` falls back to ``vmap(evaluate)``.
     """
 
     name: str
@@ -123,6 +131,7 @@ class BinaryProblem:
     payload_zero: Callable[[], PyTree]
     num_instances: int = 1
     instance_root: Optional[Callable[[jnp.ndarray], PyTree]] = None
+    evaluate_batch: Optional[Callable[[PyTree, jnp.ndarray], NodeEval]] = None
 
     @classmethod
     def from_callbacks(cls, *, name: str, max_depth: int,

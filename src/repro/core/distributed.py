@@ -155,13 +155,16 @@ def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
 
 def make_round(problem: BinaryProblem, steps_per_round: int,
                axis_names: Sequence[str] = (), max_ship: int = 16,
+               fused_steps: int = 1,
                ) -> Callable[[Lanes], Tuple[Lanes, jnp.ndarray]]:
     """Build the per-device round body (expand → steal → share → count).
 
     With empty ``axis_names`` this is the single-device round used by unit
     tests; otherwise it must run inside shard_map over those axes.
+    ``fused_steps`` groups S engine steps per expand-loop iteration
+    (tree-identical for any S — see ``make_expand``).
     """
-    expand = make_expand(problem, steps_per_round)
+    expand = make_expand(problem, steps_per_round, fused_steps)
 
     def round_fn(lanes: Lanes) -> Tuple[Lanes, jnp.ndarray]:
         lanes = expand(lanes)
@@ -189,10 +192,12 @@ def make_round(problem: BinaryProblem, steps_per_round: int,
 
 
 def make_distributed_round(problem: BinaryProblem, mesh: Mesh,
-                           steps_per_round: int, max_ship: int = 16):
+                           steps_per_round: int, max_ship: int = 16,
+                           fused_steps: int = 1):
     """shard_map the round over every axis of ``mesh`` (flat worker pool)."""
     axes = tuple(mesh.axis_names)
-    round_fn = make_round(problem, steps_per_round, axes, max_ship)
+    round_fn = make_round(problem, steps_per_round, axes, max_ship,
+                          fused_steps)
 
     # Lane arrays shard their leading W-dim over all mesh axes; scalars
     # (best, steps) and the incumbent payload are replicated per device.

@@ -26,7 +26,6 @@ version of the paper's solution-broadcast notification messages.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -117,23 +116,30 @@ def init_lanes(problem: BinaryProblem, num_lanes: int,
     )
 
 
-def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
-    """Advance ONE lane by one node visit.  Returns updated per-lane fields
-    plus (improved, value, payload) for incumbent election across lanes.
-
-    Branchless: every path is computed and blended with ``where`` so the
-    function vmaps over lanes with no divergence. ``evaluate`` is called
-    exactly once per step — the fused node visit is the hot spot, and all
-    per-node intermediates are shared inside it (DESIGN.md §1).
-    """
+def _select_node(idx, depth, stack):
+    """Gather ONE lane's current node state off its stack (vmapped by
+    ``make_step`` — the select half of the select/evaluate/advance split
+    that lets ``evaluate_batch`` see all lanes in one call)."""
     il = idx.shape[0]
     d = jnp.clip(depth, 0, il - 1)
     state = jax.tree_util.tree_map(
         lambda s: jax.lax.dynamic_index_in_dim(s, d, keepdims=False), stack)
+    return state, d
+
+
+def _advance_lane(idx, depth, base, active, stack, best, ev, d):
+    """Apply ONE lane's NodeEval: descend/backtrack and report
+    (improved, value, payload) for incumbent election across lanes.
+
+    Branchless: every path is computed and blended with ``where`` so the
+    function vmaps over lanes with no divergence.  ``ev`` is the node's
+    evaluation — produced per-lane by ``vmap(evaluate)`` or for all lanes
+    at once by ``evaluate_batch`` (DESIGN.md §1/§5.5); either way exactly
+    one evaluation backs one node visit.
+    """
+    il = idx.shape[0]
     c = idx[d]
     first = c == UNVISITED
-
-    ev = problem.evaluate(state, best)
     is_sol, val, lb = ev.is_solution, ev.value, ev.lower_bound
 
     improved = active & first & is_sol & (val < best)
@@ -173,10 +179,21 @@ def _step_lane(problem: BinaryProblem, idx, depth, base, active, stack, best):
 
 
 def make_step(problem: BinaryProblem):
-    """Build the vectorized one-step transition Lanes -> Lanes."""
+    """Build the vectorized one-step transition Lanes -> Lanes.
 
-    step_v = jax.vmap(functools.partial(_step_lane, problem),
-                      in_axes=(0, 0, 0, 0, 0, 0))
+    The step is select → evaluate → advance: node states are gathered per
+    lane, evaluated — through ``problem.evaluate_batch`` as ONE batched
+    call when the problem provides it, else ``vmap(evaluate)`` — and the
+    results applied per lane.  Both evaluation paths are bitwise-identical
+    by the ``evaluate_batch`` contract, so the search tree is invariant.
+    """
+
+    select_v = jax.vmap(_select_node)
+    advance_v = jax.vmap(_advance_lane)
+    if problem.evaluate_batch is not None:
+        eval_all = problem.evaluate_batch
+    else:
+        eval_all = jax.vmap(problem.evaluate)
 
     def step(lanes: Lanes) -> Lanes:
         w = lanes.active.shape[0]
@@ -184,9 +201,12 @@ def make_step(problem: BinaryProblem):
         safe_inst = jnp.clip(lanes.inst, 0, k - 1)
         # Each lane prunes against ITS instance's incumbent.
         best_per_lane = lanes.best[safe_inst]
+        states, d = select_v(lanes.idx, lanes.depth, lanes.stack)
+        evs = eval_all(states, best_per_lane)
         (idx, depth, active, stack, visited, improved, vals,
-         payloads) = step_v(lanes.idx, lanes.depth, lanes.base, lanes.active,
-                            lanes.stack, best_per_lane)
+         payloads) = advance_v(lanes.idx, lanes.depth, lanes.base,
+                               lanes.active, lanes.stack, best_per_lane,
+                               evs, d)
         # Incumbent election per instance (the paper's broadcast, free
         # here): segment-min of the improved values over ``inst``, then the
         # lowest-id winning lane supplies the payload for its instance.
@@ -213,23 +233,54 @@ def make_step(problem: BinaryProblem):
     return step
 
 
-def make_expand(problem: BinaryProblem, num_steps: int):
+def make_expand(problem: BinaryProblem, num_steps: int,
+                fused_steps: int = 1):
     """Run up to ``num_steps`` engine steps, early-exiting when all idle.
 
     This is the compute phase between steal rounds; ``num_steps`` is the
     round granularity R (the BSP analogue of the paper's disruption-time
     knob, hillclimbed in EXPERIMENTS.md §Perf).
+
+    ``fused_steps`` = S > 1 fuses S step applications into each while-loop
+    iteration (an unrolled ``fori_loop`` group), amortizing the loop's
+    carry bookkeeping and dispatch across S node visits per launch.  Each
+    fused sub-step is guarded by the exact original loop condition
+    (``any(active) & step_index < num_steps``), so the sequence of actual
+    ``step`` applications — and therefore the search tree, node counts and
+    step counter — is IDENTICAL for every S.
     """
     step = make_step(problem)
 
+    if fused_steps <= 1:
+        def expand(lanes: Lanes) -> Lanes:
+            def cond(carry):
+                i, lanes = carry
+                return (i < num_steps) & jnp.any(lanes.active)
+
+            def body(carry):
+                i, lanes = carry
+                return i + 1, step(lanes)
+
+            _, lanes = jax.lax.while_loop(cond, body, (jnp.int32(0), lanes))
+            return lanes
+
+        return expand
+
+    s = int(fused_steps)
+
     def expand(lanes: Lanes) -> Lanes:
         def cond(carry):
-            i, lanes = carry
-            return (i < num_steps) & jnp.any(lanes.active)
+            i, ln = carry
+            return (i < num_steps) & jnp.any(ln.active)
 
         def body(carry):
-            i, lanes = carry
-            return i + 1, step(lanes)
+            i, ln = carry
+
+            def one(j, ln):
+                run = jnp.any(ln.active) & (i + j < num_steps)
+                return jax.lax.cond(run, step, lambda l: l, ln)
+
+            return i + s, jax.lax.fori_loop(0, s, one, ln)
 
         _, lanes = jax.lax.while_loop(cond, body, (jnp.int32(0), lanes))
         return lanes

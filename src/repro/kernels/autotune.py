@@ -1,0 +1,211 @@
+"""Block-shape autotuner for the bitset kernels (DESIGN.md §5.6).
+
+The masked-popcount kernels (``bitset_ops.count_stats`` and friends) are
+parameterized by a vertex ``tile`` (rows of the table DMA'd per grid step)
+and a ``stages`` mode (1 = the legacy sequential-accumulate grid, 2 = the
+split-phase partial/combine layout of DESIGN.md §5.5).  The right choice
+depends on the problem shape ``(n, w, L, K)`` and the platform:
+
+  * compiled TPU — the ``[L, tile, w]`` broadcast intermediate must fit in
+    VMEM next to the table block and the partial-stats scratch, and within
+    that budget fewer, larger grid steps amortize DMA issue;
+  * interpret / CPU — every grid step is a Python-level iteration of the
+    interpreter's scan, so per-step overhead dominates by orders of
+    magnitude and the winner is simply the fewest grid steps.
+
+Rather than hand-tuning per call site, :func:`choose` scores every
+power-of-two candidate with an analytic cost model built from
+``repro.roofline.RooflineCounts.terms`` (the same compute/memory roofline
+used by the HLO analyzer) plus a per-grid-step launch overhead, and caches
+the winner per ``(n, w, L, K, platform)``.  :func:`measured_choice` is the
+optional measured sweep: it times the real kernel on synthetic operands
+and overrides the analytic pick in the same cache, so a deployment can
+replace the model with measurements without touching call sites.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+
+from repro.roofline import RooflineCounts
+
+#: TPU v5e-class per-chip peaks used to scale the roofline terms.  Bitset
+#: kernels are integer/VPU work, so "flops" here are uint32 word-ops.
+PEAK_WORD_OPS = 4e12
+HBM_BW = 8.0e11
+ICI_BW = 4.5e10
+
+#: Per-grid-step launch overhead (seconds).  The interpret path executes
+#: the grid as a host-level sequential scan — measured O(10µs) per step —
+#: while a compiled TPU grid step costs well under a microsecond.
+GRID_STEP_OVERHEAD_S = {"tpu": 2e-7}
+_DEFAULT_STEP_OVERHEAD_S = 1.5e-5
+
+#: VMEM working-set budget for one grid step (bytes).  The dominant term
+#: is the [L, tile, w] uint32 broadcast of the split-phase stage-1 body.
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+_MIN_TILE = 8
+_MAX_TILE = 1024
+
+
+class KernelChoice(NamedTuple):
+    """One autotuner decision: the vertex tile and the kernel layout."""
+
+    tile: int
+    stages: int          # 1 = sequential accumulate, 2 = split-phase
+
+
+_CACHE: Dict[Tuple[int, int, int, int, str], KernelChoice] = {}
+
+
+def _next_pow2(x: int) -> int:
+    p = _MIN_TILE
+    while p < x:
+        p *= 2
+    return p
+
+
+def candidate_tiles(n: int) -> Tuple[int, ...]:
+    """Power-of-two tiles from 8 up to the first one covering ``n``."""
+    top = min(_next_pow2(n), _MAX_TILE)
+    out, t = [], _MIN_TILE
+    while t <= top:
+        out.append(t)
+        t *= 2
+    return tuple(out)
+
+
+def _blocks(n: int, tile: int) -> int:
+    return -(-n // tile)
+
+
+def predict_cost(n: int, w: int, lanes: int, k: int, *, tile: int,
+                 stages: int, platform: str) -> Optional[float]:
+    """Modeled seconds for one kernel invocation, or None if infeasible.
+
+    The roofline part (word-ops vs HBM bytes) comes from
+    ``RooflineCounts.terms``; the grid term is ``steps × per-step
+    overhead`` — negligible compiled, dominant interpreted.
+    """
+    blocks = _blocks(n, tile)
+    padded = blocks * tile
+    word_bytes = 4
+
+    if stages == 2:
+        # Stage-1 working set: table block + [L, tile, w] broadcast + the
+        # lane masks + a [blocks|K·blocks, L, 4] partial scratch.
+        working = (tile * w + lanes * tile * w + 2 * lanes * w) * word_bytes
+        if working > VMEM_BUDGET_BYTES:
+            return None
+        steps = k * blocks + (1 if k * blocks > 1 else 0)
+        hbm = (k * padded * w                      # table blocks, once each
+               + k * blocks * 2 * lanes * w        # masks re-read per step
+               + 2 * k * blocks * lanes * 4        # partials out + back in
+               + lanes * 4) * word_bytes
+    else:
+        # Legacy grid (lanes, tiles): the table is re-streamed per lane.
+        steps = lanes * blocks
+        hbm = (lanes * padded * w + 2 * lanes * w * blocks
+               + lanes * 4) * word_bytes
+    # ~4 word-ops per (lane, vertex, word): and, popcount, compare, add.
+    ops = 4.0 * k * lanes * padded * w
+    terms = RooflineCounts(flops=ops, hbm_bytes=float(hbm)).terms(
+        PEAK_WORD_OPS, HBM_BW, ICI_BW)
+    roof = max(terms["compute_s"], terms["memory_s"])
+    overhead = GRID_STEP_OVERHEAD_S.get(platform, _DEFAULT_STEP_OVERHEAD_S)
+    return roof + steps * overhead
+
+
+def choose(n: int, w: int, lanes: int = 1, k: int = 1,
+           platform: Optional[str] = None) -> KernelChoice:
+    """Pick (tile, stages) for a ``(n, w, L, K)`` kernel shape.
+
+    Cached per shape and platform; a prior :func:`measured_choice` sweep
+    for the same key takes precedence over the analytic model.
+    """
+    platform = platform or jax.default_backend()
+    key = (n, w, lanes, k, platform)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    best_cost, best = None, None
+    for tile in candidate_tiles(n):
+        for stages in (2, 1):
+            cost = predict_cost(n, w, lanes, k, tile=tile, stages=stages,
+                                platform=platform)
+            if cost is None:
+                continue
+            if best_cost is None or cost < best_cost:
+                best_cost, best = cost, KernelChoice(tile, stages)
+    if best is None:                       # every candidate over budget
+        best = KernelChoice(_MIN_TILE, 1)
+    _CACHE[key] = best
+    return best
+
+
+def measured_choice(n: int, w: int, lanes: int = 1, k: int = 1, *,
+                    repeat: int = 3,
+                    platform: Optional[str] = None) -> KernelChoice:
+    """Measured sweep: time the real kernel per candidate and cache the
+    winner under the same key :func:`choose` consults.
+
+    Synthetic uint32 operands; the sweep exercises ``count_stats`` for
+    K = 1 and ``stacked_count_stats`` otherwise.  Intended for offline
+    tuning (benchmarks) — per-candidate compile + run is far too slow for
+    a hot path.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import bitset_ops
+
+    platform = platform or jax.default_backend()
+    rng = np.random.default_rng(0)
+
+    def bits(shape):
+        return jnp.asarray(
+            rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
+
+    tables = bits((k, n, w)) if k > 1 else bits((n, w))
+    mask, valid = bits((lanes, w)), bits((lanes, w))
+    inst = jnp.asarray(rng.integers(0, k, lanes).astype(np.int32))
+
+    best_t, best = None, None
+    for tile in candidate_tiles(n):
+        for stages in (2, 1):
+            if predict_cost(n, w, lanes, k, tile=tile, stages=stages,
+                            platform=platform) is None:
+                continue
+            if k > 1:
+                fn = jax.jit(lambda t_, i, m, v, _tl=tile, _st=stages:
+                             bitset_ops.stacked_count_stats(
+                                 t_, i, m, v, tile=_tl, stages=_st))
+                args = (tables, inst, mask, valid)
+            else:
+                fn = jax.jit(lambda t_, m, v, _tl=tile, _st=stages:
+                             bitset_ops.count_stats(t_, m, v, tile=_tl,
+                                                    stages=_st))
+                args = (tables, mask, valid)
+            jax.block_until_ready(fn(*args))           # compile + warm
+            t = min(_time_once(fn, args) for _ in range(repeat))
+            if best_t is None or t < best_t:
+                best_t, best = t, KernelChoice(tile, stages)
+    if best is None:
+        best = choose(n, w, lanes, k, platform)
+    _CACHE[(n, w, lanes, k, platform)] = best
+    return best
+
+
+def _time_once(fn, args) -> float:
+    import time
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def clear_cache() -> None:
+    """Drop every cached decision (tests / re-tuning)."""
+    _CACHE.clear()

@@ -7,8 +7,10 @@ rule) and (b) sum the alive degrees (= 2·m_alive, the bound's numerator).
 That is exactly the universal masked-popcount pass of
 ``repro.kernels.bitset_ops.count_stats`` with mask = valid = the alive
 set, so this module is a thin argument adapter — the kernel body, grid and
-block shapes live in ``bitset_ops`` and are documented in DESIGN.md §5.1;
-the per-column contract is §5.2.
+block shapes live in ``bitset_ops`` and are documented in DESIGN.md
+§5.1/§5.5; the per-column contract is §5.2.  ``tile``/``stages`` default
+to the per-shape autotuner (DESIGN.md §5.6) and ``interpret=None``
+compiles on TPU / interprets elsewhere.
 
 Kept as a module (rather than folding the call sites into
 ``problems/vertex_cover.py``) so the kernel library's problem bindings
@@ -19,22 +21,27 @@ stay enumerable in one place per problem family, mirroring
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.kernels import bitset_ops
 
 
 def degree_stats(adj: jnp.ndarray, alive: jnp.ndarray, *,
-                 tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+                 tile: Optional[int] = None, stages: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """adj: uint32[n, w] packed adjacency; alive: uint32[L, w] per-lane
     masks.  Returns int32[L, 3] = (best_degree, best_vertex, degree_sum);
     (-1, -1, 0) when no vertex is alive.  ``degree_sum`` is the sum of
     alive-vertex degrees, i.e. twice the residual edge count."""
     return bitset_ops.count_stats(adj, alive, alive, tile=tile,
-                                  interpret=interpret)[:, :3]
+                                  stages=stages, interpret=interpret)[:, :3]
 
 
 def degree_argmax(adj: jnp.ndarray, alive: jnp.ndarray, *,
-                  tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+                  tile: Optional[int] = None, stages: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """Compatibility wrapper: int32[L, 2] = (best_degree, best_vertex)."""
-    return degree_stats(adj, alive, tile=tile, interpret=interpret)[:, :2]
+    return degree_stats(adj, alive, tile=tile, stages=stages,
+                        interpret=interpret)[:, :2]

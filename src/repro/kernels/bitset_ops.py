@@ -12,32 +12,39 @@ instead of forking its own kernel:
   ``count_stats``         — THE masked-popcount pass over one table
                             (DESIGN.md §5.2: the contract);
   ``stacked_count_stats`` — the batched ``uint32[K, n, w]`` variant for the
-                            multi-tenant service: each lane's table is
-                            selected by its instance id via scalar
-                            prefetch (DESIGN.md §5.3);
+                            multi-tenant service (DESIGN.md §5.3);
   ``popcount_reduce``     — per-row popcount sum (set cardinalities);
   ``masked_row_reduce``   — OR/AND-accumulate of table rows selected by a
                             bitset (e.g. neighborhoods of a chosen set).
 
-Problem bindings (DESIGN.md §5.4): ``bitset_degree.degree_stats`` (vertex
-cover) and ``domination_stats`` (dominating set) below are thin argument
-adapters over ``count_stats``; ``service/batch_problem.py`` binds
-``stacked_count_stats`` directly.  Grid/block choices, memory spaces and
-the determinism rules are documented in DESIGN.md §5.1 — in short: grid
-``(lanes, vertex_tiles)`` with the tile axis innermost/sequential so a
-``(1, ·)`` output block accumulates in VMEM, ascending tile order plus a
-strict ``>`` update for the paper's smallest-id tie-break, and
-``jax.lax.population_count`` on uint32 words (VPU bitwise ops, no MXU).
+Two kernel layouts implement the contract (selected by ``stages``, chosen
+per shape by ``repro.kernels.autotune`` when left ``None``):
 
-Validated with ``interpret=True`` against the jnp oracles in ``ref.py``
-and the numpy oracles in ``tests/test_bitset_ops.py``; ``vmap`` over lane
-operands (as the engine applies per-lane ``evaluate``) lifts the lane axis
-into the kernel grid, scalar-prefetch operands included.
+  stages=2 — SPLIT-PHASE (DESIGN.md §5.5, the production path): stage 1
+             is a grid over vertex tile-blocks only, every lane batched
+             inside the block body, writing per-block partial stats to a
+             ``[blocks, L, 4]`` scratch; stage 2 is one small combine
+             kernel whose cross-block argmax keeps the smallest-id
+             tie-break (block args ascend with block index, so
+             ``min(arg | partial best == global best)`` is exact).  No
+             sequential grid axis, no ``@pl.when`` init/accumulate
+             dependency — every stage-1 step is independent.
+  stages=1 — the legacy grid ``(lanes, tiles)`` with the tile axis
+             innermost/sequential accumulating into a ``(1, 4)`` block
+             (kept as the cross-check and for degenerate shapes).
+
+``interpret=None`` (the default) auto-detects the platform: compiled on
+TPU, interpret fallback elsewhere — the same rule as ``ops.py`` dispatch.
+Validated against the jnp oracles in ``ref.py`` and the numpy oracles in
+``tests/test_bitset_ops.py`` / ``tests/test_split_phase.py``; ``vmap``
+over lane operands (as the engine applies per-lane ``evaluate``) lifts
+the lane axis into the kernel grid for either layout.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,15 +56,65 @@ from jax.experimental.pallas import tpu as pltpu
 BEST, ARG, SUM, MASK_COUNT = 0, 1, 2, 3
 
 
-def _valid_bits(mask_row: jnp.ndarray, base: int, tile: int, n: int):
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    """Platform default: compiled on TPU, interpret everywhere else."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _validate_tile(tile, stages: int) -> None:
+    """The ISSUE-6 tile contract: positive everywhere; power-of-two where
+    the split-phase combine requires it (block args must ascend uniformly
+    for the smallest-id tie-break arithmetic)."""
+    if stages not in (1, 2):
+        raise ValueError(f"stages must be 1 or 2, got {stages!r}")
+    if not isinstance(tile, int) or isinstance(tile, bool) or tile < 1:
+        raise ValueError(f"tile must be a positive int, got {tile!r}")
+    if stages == 2 and tile & (tile - 1):
+        raise ValueError(
+            f"tile must be a power of two for the split-phase (stages=2) "
+            f"kernels, got {tile}")
+
+
+def _resolve_shape(n: int, w: int, lanes: int, k: int,
+                   tile: Optional[int], stages: Optional[int]):
+    """Fill unset (tile, stages) from the per-shape autotuner cache."""
+    if tile is None or stages is None:
+        from repro.kernels import autotune
+        choice = autotune.choose(n, w, lanes=lanes, k=k)
+        tile = choice.tile if tile is None else tile
+        stages = choice.stages if stages is None else stages
+    return tile, stages
+
+
+def _valid_bits(mask_row: jnp.ndarray, base, tile: int, n: int):
     """bool[tile]: is bit ``base + i`` of ``mask_row`` (uint32[w]) set, for
     a real vertex (``vid < n``)?  The per-tile membership test shared by
-    every kernel below."""
+    the sequential kernels."""
     vid = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)[:, 0]
     word_ix = vid // 32
     bit_ix = (vid % 32).astype(jnp.uint32)
     row = jnp.take(mask_row, word_ix, axis=0)
     return (((row >> bit_ix) & jnp.uint32(1)) == jnp.uint32(1)) & (vid < n)
+
+
+def _valid_bits_batch(valid: jnp.ndarray, base, tile: int, n: int):
+    """bool[L, tile]: the batched-lane form of ``_valid_bits`` used by the
+    split-phase stage-1 body (``valid`` is the whole uint32[L, w] block)."""
+    vid = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    word_ix = vid[0] // 32
+    bit_ix = (vid % 32).astype(jnp.uint32)           # [1, tile]
+    rows = jnp.take(valid, word_ix, axis=1)          # [L, tile]
+    return (((rows >> bit_ix) & jnp.uint32(1)) == jnp.uint32(1)) & (vid < n)
+
+
+def _pad_rows(table: jnp.ndarray, tile: int) -> jnp.ndarray:
+    pad = (-table.shape[-2]) % tile
+    if pad:
+        width = [(0, 0)] * (table.ndim - 2) + [(0, pad), (0, 0)]
+        table = jnp.pad(table, width)
+    return table
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +123,7 @@ def _valid_bits(mask_row: jnp.ndarray, base: int, tile: int, n: int):
 
 def _count_stats_body(table, mask_ref, valid_ref, out_ref, *,
                       tile: int, n: int):
-    """Shared kernel body; ``table`` is the loaded [tile, w] block."""
+    """stages=1 kernel body; ``table`` is the loaded [tile, w] block."""
     t = pl.program_id(1)
     neg = jnp.int32(-1)
     mask = mask_ref[...]                         # [1, w] uint32
@@ -94,27 +151,10 @@ def _count_stats_body(table, mask_ref, valid_ref, out_ref, *,
     out_ref[0, SUM] = out_ref[0, SUM] + jnp.sum(jnp.maximum(cnts, 0))
 
 
-def _pad_rows(table: jnp.ndarray, tile: int) -> jnp.ndarray:
-    pad = (-table.shape[-2]) % tile
-    if pad:
-        width = [(0, 0)] * (table.ndim - 2) + [(0, pad), (0, 0)]
-        table = jnp.pad(table, width)
-    return table
-
-
-def count_stats(table: jnp.ndarray, mask: jnp.ndarray, valid: jnp.ndarray,
-                *, tile: int = 128, interpret: bool = True) -> jnp.ndarray:
-    """The masked-popcount pass (DESIGN.md §5.2).
-
-    ``table``: uint32[n, w] packed bitset rows; ``mask``/``valid``:
-    uint32[L, w] per-lane masks.  Returns int32[L, 4] =
-    ``(best_count, best_vertex, count_sum, mask_count)`` where
-    ``count[v] = popcount(table[v] & mask)`` for vertices whose bit is set
-    in ``valid`` (all others count -1), ``best_vertex`` breaks ties toward
-    the smallest id (-1 when nothing is valid), ``count_sum`` is
-    ``Σ max(count, 0)`` and ``mask_count = popcount(mask)``.
-    """
-    n, w = table.shape
+def _count_stats_seq(table, mask, valid, *, tile: int, n: int,
+                     interpret: bool) -> jnp.ndarray:
+    """stages=1: the legacy sequential-accumulate grid (lanes, tiles)."""
+    w = table.shape[1]
     lanes = mask.shape[0]
     table = _pad_rows(table, tile)
     tiles = table.shape[0] // tile
@@ -137,6 +177,113 @@ def count_stats(table: jnp.ndarray, mask: jnp.ndarray, valid: jnp.ndarray,
     )(table, mask, valid)
 
 
+def _partial_stats(table, mask, valid, base, *, tile: int, n: int):
+    """Split-phase stage-1 math: stats of one [tile, w] block against ALL
+    lanes at once.  ``table`` [tile, w]; ``mask``/``valid`` [L, w];
+    returns int32[L, 4] with block-local best/arg (arg already offset by
+    ``base``) and the block's partial count sum.  ``mask_count`` is the
+    full popcount(mask) — block-invariant, combined with max."""
+    rows = jnp.bitwise_and(table[None, :, :], mask[:, None, :])  # [L,tile,w]
+    cnts = jax.lax.population_count(rows).astype(jnp.int32).sum(axis=2)
+    cnts = jnp.where(_valid_bits_batch(valid, base, tile, n),
+                     cnts, jnp.int32(-1))
+    best = jnp.max(cnts, axis=1)
+    arg = base + jnp.argmax(cnts, axis=1).astype(jnp.int32)
+    arg = jnp.where(best < 0, jnp.int32(-1), arg)
+    ssum = jnp.sum(jnp.maximum(cnts, 0), axis=1)
+    mc = jax.lax.population_count(mask).astype(jnp.int32).sum(axis=1)
+    return jnp.stack([best, arg, ssum, mc], axis=1)
+
+
+def _combine_body(part_ref, out_ref):
+    """Split-phase stage 2 (DESIGN.md §5.5): reduce [B, L, 4] partials to
+    the final [L, 4].  Cross-block smallest-id tie-break: every block's
+    args lie in its own ascending id range, so the minimum arg among the
+    blocks achieving the global best IS the first global argmax."""
+    part = part_ref[...]                             # [B, L, 4] int32
+    best = jnp.max(part[:, :, BEST], axis=0)
+    big = jnp.int32(2**30)
+    args = jnp.where(part[:, :, BEST] == best[None, :], part[:, :, ARG], big)
+    arg = jnp.min(args, axis=0)
+    arg = jnp.where(best < 0, jnp.int32(-1), arg)
+    ssum = jnp.sum(part[:, :, SUM], axis=0)
+    mc = jnp.max(part[:, :, MASK_COUNT], axis=0)
+    out_ref[...] = jnp.stack([best, arg, ssum, mc], axis=1)
+
+
+def _combine(part: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
+    b, lanes, _ = part.shape
+    return pl.pallas_call(
+        _combine_body,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, lanes, 4), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((lanes, 4), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, 4), jnp.int32),
+        interpret=interpret,
+    )(part)
+
+
+def _count_stats_split(table, mask, valid, *, tile: int, n: int,
+                       interpret: bool) -> jnp.ndarray:
+    """stages=2: grid over tile-blocks only, lanes batched in-block, then
+    one combine launch (elided when a single block covers the table)."""
+    w = table.shape[1]
+    lanes = mask.shape[0]
+    table = _pad_rows(table, tile)
+    blocks = table.shape[0] // tile
+
+    def stage1(table_ref, mask_ref, valid_ref, out_ref):
+        b = pl.program_id(0)
+        out_ref[0] = _partial_stats(table_ref[...], mask_ref[...],
+                                    valid_ref[...], b * tile,
+                                    tile=tile, n=n)
+
+    part = pl.pallas_call(
+        stage1,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda b: (b, 0)),
+            pl.BlockSpec((lanes, w), lambda b: (0, 0)),
+            pl.BlockSpec((lanes, w), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lanes, 4), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, lanes, 4), jnp.int32),
+        interpret=interpret,
+    )(table, mask, valid)
+    if blocks == 1:
+        return part[0]
+    return _combine(part, interpret=interpret)
+
+
+def count_stats(table: jnp.ndarray, mask: jnp.ndarray, valid: jnp.ndarray,
+                *, tile: Optional[int] = None, stages: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """The masked-popcount pass (DESIGN.md §5.2).
+
+    ``table``: uint32[n, w] packed bitset rows; ``mask``/``valid``:
+    uint32[L, w] per-lane masks.  Returns int32[L, 4] =
+    ``(best_count, best_vertex, count_sum, mask_count)`` where
+    ``count[v] = popcount(table[v] & mask)`` for vertices whose bit is set
+    in ``valid`` (all others count -1), ``best_vertex`` breaks ties toward
+    the smallest id (-1 when nothing is valid), ``count_sum`` is
+    ``Σ max(count, 0)`` and ``mask_count = popcount(mask)``.
+
+    ``tile``/``stages`` default to the autotuner's per-shape choice
+    (DESIGN.md §5.6); ``interpret=None`` compiles on TPU and interprets
+    elsewhere.
+    """
+    n, w = table.shape
+    lanes = mask.shape[0]
+    tile, stages = _resolve_shape(n, w, lanes, 1, tile, stages)
+    _validate_tile(tile, stages)
+    interpret = _auto_interpret(interpret)
+    if stages == 1:
+        return _count_stats_seq(table, mask, valid, tile=tile, n=n,
+                                interpret=interpret)
+    return _count_stats_split(table, mask, valid, tile=tile, n=n,
+                              interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # stacked_count_stats: the batched uint32[K, n, w] variant (DESIGN.md §5.3)
 # ---------------------------------------------------------------------------
@@ -148,22 +295,17 @@ def _stacked_kernel(inst_ref, tables_ref, mask_ref, valid_ref, out_ref, *,
                       tile=tile, n=n)
 
 
-def stacked_count_stats(tables: jnp.ndarray, inst: jnp.ndarray,
-                        mask: jnp.ndarray, valid: jnp.ndarray, *,
-                        tile: int = 128,
-                        interpret: bool = True) -> jnp.ndarray:
-    """``count_stats`` over stacked tables: uint32[K, n, w] + int32[L]
-    instance ids -> int32[L, 4], lane ``l`` reduced against
-    ``tables[inst[l]]``.
-
-    ``inst`` is a scalar-prefetch operand (DESIGN.md §5.3): the table
-    BlockSpec's index map reads it, so each grid step DMAs exactly ONE
-    instance's ``(tile, w)`` block into VMEM — the kernel never sees the
-    other K-1 tables, and table traffic is independent of K.  Out-of-range
-    ids are clipped (the service parks idle lanes on ``NO_INSTANCE`` = -1).
-    """
-    k, n, w = tables.shape
+def _stacked_seq(tables, inst, mask, valid, *, tile: int, n: int,
+                 interpret: bool) -> jnp.ndarray:
+    """stages=1: one lane per outer grid step, table block selected by
+    scalar prefetch.  Idle (inst < 0) lanes are parked before the call:
+    their masks are zeroed (so the output is the (-1, -1, 0, 0) no-valid
+    row) and their prefetch id is clipped only to keep the DMA in range."""
+    k, n_, w = tables.shape
     lanes = mask.shape[0]
+    idle = inst.astype(jnp.int32) < 0
+    mask = jnp.where(idle[:, None], jnp.uint32(0), mask)
+    valid = jnp.where(idle[:, None], jnp.uint32(0), valid)
     inst = jnp.clip(inst.astype(jnp.int32), 0, k - 1)
     tables = _pad_rows(tables, tile)
     tiles = tables.shape[1] // tile
@@ -186,6 +328,82 @@ def stacked_count_stats(tables: jnp.ndarray, inst: jnp.ndarray,
     )(inst, tables, mask, valid)
 
 
+def _stacked_split(tables, inst, mask, valid, *, tile: int, n: int,
+                   interpret: bool) -> jnp.ndarray:
+    """stages=2: grid (K, blocks) — each step loads ONE instance's tile
+    block and reduces it against every lane bound to that instance (other
+    lanes' masks are zeroed in-body, so their partials stay the neutral
+    (-1, -1, 0, 0) row).  Table traffic is K × blocks DMAs regardless of
+    the lane count or how many lanes are idle: an unbound (inst < 0) lane
+    matches no instance step, causes no table traffic of its own, and
+    combines to the parked (-1, -1, 0, 0) output."""
+    k, n_, w = tables.shape
+    lanes = mask.shape[0]
+    tables = _pad_rows(tables, tile)
+    blocks = tables.shape[1] // tile
+    inst2 = inst.astype(jnp.int32).reshape(1, lanes)
+
+    def stage1(tables_ref, inst_ref, mask_ref, valid_ref, out_ref):
+        ki = pl.program_id(0)
+        b = pl.program_id(1)
+        bound = inst_ref[0, :] == ki                 # [L]
+        m = jnp.where(bound[:, None], mask_ref[...], jnp.uint32(0))
+        v = jnp.where(bound[:, None], valid_ref[...], jnp.uint32(0))
+        out_ref[0, 0] = _partial_stats(tables_ref[0], m, v, b * tile,
+                                       tile=tile, n=n)
+
+    part = pl.pallas_call(
+        stage1,
+        grid=(k, blocks),
+        in_specs=[
+            pl.BlockSpec((1, tile, w), lambda ki, b: (ki, b, 0)),
+            pl.BlockSpec((1, lanes), lambda ki, b: (0, 0)),
+            pl.BlockSpec((lanes, w), lambda ki, b: (0, 0)),
+            pl.BlockSpec((lanes, w), lambda ki, b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, lanes, 4), lambda ki, b: (ki, b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, blocks, lanes, 4), jnp.int32),
+        interpret=interpret,
+    )(tables, inst2, mask, valid)
+    part = part.reshape(k * blocks, lanes, 4)
+    if k * blocks == 1:
+        return part[0]
+    return _combine(part, interpret=interpret)
+
+
+def stacked_count_stats(tables: jnp.ndarray, inst: jnp.ndarray,
+                        mask: jnp.ndarray, valid: jnp.ndarray, *,
+                        tile: Optional[int] = None,
+                        stages: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """``count_stats`` over stacked tables: uint32[K, n, w] + int32[L]
+    instance ids -> int32[L, 4], lane ``l`` reduced against
+    ``tables[inst[l]]``.
+
+    Idle lanes (``inst < 0``, the service's ``NO_INSTANCE``) are PARKED:
+    they bind to no table, generate no table traffic of their own, and
+    return the no-valid row ``(-1, -1, 0, 0)`` — the engine ignores their
+    outputs, and this contract makes that safe by construction (the old
+    behavior clipped them onto instance 0's table).
+
+    Layouts (DESIGN.md §5.3/§5.5): stages=2 runs a grid over
+    ``(instance, tile-block)`` with every lane batched in-body — table
+    traffic is K·blocks DMAs, independent of the lane count; stages=1 is
+    the legacy per-lane scalar-prefetch grid — L·blocks DMAs, one
+    instance block per lane-step.  Defaults come from the autotuner.
+    """
+    k, n, w = tables.shape
+    lanes = mask.shape[0]
+    tile, stages = _resolve_shape(n, w, lanes, k, tile, stages)
+    _validate_tile(tile, stages)
+    interpret = _auto_interpret(interpret)
+    if stages == 1:
+        return _stacked_seq(tables, inst, mask, valid, tile=tile, n=n,
+                            interpret=interpret)
+    return _stacked_split(tables, inst, mask, valid, tile=tile, n=n,
+                          interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # popcount_reduce: per-lane set cardinalities
 # ---------------------------------------------------------------------------
@@ -196,7 +414,7 @@ def _popcount_kernel(rows_ref, out_ref):
 
 
 def popcount_reduce(rows: jnp.ndarray, *,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """uint32[L, w] -> int32[L]: popcount of each packed row (set sizes)."""
     lanes, w = rows.shape
     out = pl.pallas_call(
@@ -205,7 +423,7 @@ def popcount_reduce(rows: jnp.ndarray, *,
         in_specs=[pl.BlockSpec((1, w), lambda l: (l, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda l: (l, 0)),
         out_shape=jax.ShapeDtypeStruct((lanes, 1), jnp.int32),
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
     )(rows)
     return out[:, 0]
 
@@ -234,7 +452,7 @@ def _row_reduce_kernel(table_ref, sel_ref, out_ref, *, tile: int, n: int,
 
 def masked_row_reduce(table: jnp.ndarray, select: jnp.ndarray, *,
                       op: str = "or", tile: int = 128,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Bitwise OR (or AND) of the rows of ``table`` (uint32[n, w]) whose
     bit is set in ``select`` (uint32[L, w]) -> uint32[L, w].  The OR form
     with an adjacency table is ``N(S)`` for the selected set S; the AND
@@ -243,6 +461,8 @@ def masked_row_reduce(table: jnp.ndarray, select: jnp.ndarray, *,
     if op not in ("or", "and"):
         raise ValueError(f"unknown reduce op {op!r}")
     n, w = table.shape
+    if not isinstance(tile, int) or isinstance(tile, bool) or tile < 1:
+        raise ValueError(f"tile must be a positive int, got {tile!r}")
     if tile & (tile - 1):
         raise ValueError(f"tile must be a power of two, got {tile}")
     lanes = select.shape[0]
@@ -257,7 +477,7 @@ def masked_row_reduce(table: jnp.ndarray, select: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((1, w), lambda l, t: (l, 0)),
         out_shape=jax.ShapeDtypeStruct((lanes, w), jnp.uint32),
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
     )(table, select)
 
 
@@ -267,7 +487,9 @@ def masked_row_reduce(table: jnp.ndarray, select: jnp.ndarray, *,
 
 def domination_stats(cadj: jnp.ndarray, dominated: jnp.ndarray,
                      cand: jnp.ndarray, fullm: jnp.ndarray, *,
-                     tile: int = 128, interpret: bool = True) -> jnp.ndarray:
+                     tile: Optional[int] = None,
+                     stages: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Dominating set's node statistics as a ``count_stats`` binding:
     mask = the undominated set, valid = the candidate set.  ``cadj``:
     uint32[n, w] CLOSED adjacency; ``dominated``/``cand``: uint32[L, w];
@@ -276,5 +498,6 @@ def domination_stats(cadj: jnp.ndarray, dominated: jnp.ndarray,
     ``|N[v] \\ dominated|`` per candidate, the tie-break is smallest-id and
     ``undominated`` comes free as the pass's mask popcount."""
     mask = jnp.bitwise_and(fullm[None, :], jnp.bitwise_not(dominated))
-    out = count_stats(cadj, mask, cand, tile=tile, interpret=interpret)
+    out = count_stats(cadj, mask, cand, tile=tile, stages=stages,
+                      interpret=interpret)
     return jnp.stack([out[:, BEST], out[:, ARG], out[:, MASK_COUNT]], axis=1)

@@ -58,66 +58,75 @@ def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 64,
     return ref.ssd_scan_ref(x, dt, a, b, c, d, chunk=chunk)
 
 
-@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
-def degree_stats(adj, alive, *, tile: int = 128,
+@partial(jax.jit, static_argnames=("tile", "stages", "use_pallas",
+                                   "interpret"))
+def degree_stats(adj, alive, *, tile: Optional[int] = None,
+                 stages: Optional[int] = None,
                  use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """(best_degree, best_vertex, degree_sum) per lane — the fused
     vertex-cover node statistics (see problems.vertex_cover)."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _degree_stats_pallas(adj, alive, tile=tile,
-                                    interpret=(not _on_tpu()) if interpret
-                                    is None else interpret)
+        return _degree_stats_pallas(adj, alive, tile=tile, stages=stages,
+                                    interpret=interpret)
     return ref.degree_stats_ref(adj, alive)
 
 
-@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
-def degree_argmax(adj, alive, *, tile: int = 128,
+@partial(jax.jit, static_argnames=("tile", "stages", "use_pallas",
+                                   "interpret"))
+def degree_argmax(adj, alive, *, tile: Optional[int] = None,
+                  stages: Optional[int] = None,
                   use_pallas: Optional[bool] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _degree_pallas(adj, alive, tile=tile,
-                              interpret=(not _on_tpu()) if interpret is None
-                              else interpret)
+        return _degree_pallas(adj, alive, tile=tile, stages=stages,
+                              interpret=interpret)
     return ref.degree_argmax_ref(adj, alive)
 
 
 def _dispatch(pallas_fn, ref_fn, args, *, use_pallas, interpret,
               kernel_kw=None, ref_kw=None):
     """Shared backend resolution for the bitset_ops dispatchers: Pallas on
-    TPU (or when forced), jnp oracle elsewhere; interpret defaults to the
-    kernel body off-TPU."""
+    TPU (or when forced), jnp oracle elsewhere; ``interpret=None`` is
+    resolved by the kernel itself (compiled on TPU, interpret off-TPU)."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return pallas_fn(*args,
-                         interpret=(not _on_tpu()) if interpret is None
-                         else interpret, **(kernel_kw or {}))
+        return pallas_fn(*args, interpret=interpret, **(kernel_kw or {}))
     return ref_fn(*args, **(ref_kw or {}))
 
 
-@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
-def count_stats(table, mask, valid, *, tile: int = 128,
+@partial(jax.jit, static_argnames=("tile", "stages", "use_pallas",
+                                   "interpret"))
+def count_stats(table, mask, valid, *, tile: Optional[int] = None,
+                stages: Optional[int] = None,
                 use_pallas: Optional[bool] = None,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """The universal masked-popcount pass (DESIGN.md §5.2):
-    (best_count, best_vertex, count_sum, mask_count) per lane."""
+    (best_count, best_vertex, count_sum, mask_count) per lane.
+    ``tile``/``stages`` default to the autotuner (DESIGN.md §5.6)."""
     return _dispatch(bitset_ops.count_stats, ref.count_stats_ref,
                      (table, mask, valid), use_pallas=use_pallas,
-                     interpret=interpret, kernel_kw={"tile": tile})
+                     interpret=interpret,
+                     kernel_kw={"tile": tile, "stages": stages})
 
 
-@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
-def stacked_count_stats(tables, inst, mask, valid, *, tile: int = 128,
+@partial(jax.jit, static_argnames=("tile", "stages", "use_pallas",
+                                   "interpret"))
+def stacked_count_stats(tables, inst, mask, valid, *,
+                        tile: Optional[int] = None,
+                        stages: Optional[int] = None,
                         use_pallas: Optional[bool] = None,
                         interpret: Optional[bool] = None) -> jnp.ndarray:
     """Batched uint32[K, n, w] masked-popcount pass (DESIGN.md §5.3) —
-    each lane reduced against its instance's table."""
+    each lane reduced against its instance's table; idle (inst < 0)
+    lanes park on the (-1, -1, 0, 0) row."""
     return _dispatch(bitset_ops.stacked_count_stats,
                      ref.stacked_count_stats_ref,
                      (tables, inst, mask, valid), use_pallas=use_pallas,
-                     interpret=interpret, kernel_kw={"tile": tile})
+                     interpret=interpret,
+                     kernel_kw={"tile": tile, "stages": stages})
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -139,12 +148,16 @@ def masked_row_reduce(table, select, *, op: str = "or", tile: int = 128,
                      kernel_kw={"op": op, "tile": tile}, ref_kw={"op": op})
 
 
-@partial(jax.jit, static_argnames=("tile", "use_pallas", "interpret"))
-def domination_stats(cadj, dominated, cand, fullm, *, tile: int = 128,
+@partial(jax.jit, static_argnames=("tile", "stages", "use_pallas",
+                                   "interpret"))
+def domination_stats(cadj, dominated, cand, fullm, *,
+                     tile: Optional[int] = None,
+                     stages: Optional[int] = None,
                      use_pallas: Optional[bool] = None,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """(best_coverage, branch_vertex, undominated) per lane — the fused
     dominating-set node statistics (see problems.dominating_set)."""
     return _dispatch(bitset_ops.domination_stats, ref.domination_stats_ref,
                      (cadj, dominated, cand, fullm), use_pallas=use_pallas,
-                     interpret=interpret, kernel_kw={"tile": tile})
+                     interpret=interpret,
+                     kernel_kw={"tile": tile, "stages": stages})

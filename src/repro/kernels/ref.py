@@ -55,9 +55,16 @@ def stacked_count_stats_ref(tables: jnp.ndarray, inst: jnp.ndarray,
                             mask: jnp.ndarray,
                             valid: jnp.ndarray) -> jnp.ndarray:
     """tables uint32[K, n, w]; inst int32[L]; mask/valid uint32[L, w] ->
-    int32[L, 4], lane l reduced against tables[clip(inst[l])]."""
+    int32[L, 4], lane l reduced against tables[inst[l]].  Idle lanes
+    (inst < 0, the service's NO_INSTANCE) are parked: their masks are
+    zeroed so they return the no-valid row (-1, -1, 0, 0) instead of
+    being clipped onto instance 0's table."""
     k = tables.shape[0]
-    inst = jnp.clip(inst.astype(jnp.int32), 0, k - 1)
+    inst = inst.astype(jnp.int32)
+    idle = inst < 0
+    mask = jnp.where(idle[:, None], jnp.uint32(0), mask)
+    valid = jnp.where(idle[:, None], jnp.uint32(0), valid)
+    inst = jnp.clip(inst, 0, k - 1)
     return jax.vmap(
         lambda i, m, v: _count_stats_one(tables[i], m, v))(inst, mask, valid)
 

@@ -68,9 +68,12 @@ DomStatsFn = Callable[[jnp.ndarray, jnp.ndarray],
 
 
 def make_domination_stats_fn(graph: Graph, backend: str = "jnp", *,
-                             tile: int = 128,
+                             tile: Optional[int] = None,
                              interpret: Optional[bool] = None) -> DomStatsFn:
-    """Build the per-node domination-statistics function for ``backend``."""
+    """Build the per-node domination-statistics function for ``backend``.
+
+    ``tile=None`` defers the kernel block shape to the per-shape autotuner
+    (DESIGN.md §5.6)."""
     n, w = graph.n, graph.words
     cadj = jnp.asarray(_closed_adj(graph))
     fullm = jnp.asarray(full_mask(n))
@@ -80,8 +83,7 @@ def make_domination_stats_fn(graph: Graph, backend: str = "jnp", *,
 
         def stats(dominated: jnp.ndarray, cand: jnp.ndarray):
             out = ops.domination_stats(cadj, dominated[None, :],
-                                       cand[None, :], fullm,
-                                       tile=min(tile, max(n, 8)),
+                                       cand[None, :], fullm, tile=tile,
                                        use_pallas=True, interpret=interpret)[0]
             # Kernel reports vertex -1 when no candidate exists; the jnp
             # argmax reports 0.  Normalize so both backends yield identical
@@ -127,18 +129,24 @@ def _pack_ds(graph: Graph, n: int):
     doc="minimum dominating set via set-cover branching (paper §V)",
 )
 def make_dominating_set(graph: Graph, backend: str = "jnp", *,
-                        tile: int = 128, interpret: Optional[bool] = None,
+                        tile: Optional[int] = None,
+                        interpret: Optional[bool] = None,
                         stats_fn: Optional[DomStatsFn] = None
                         ) -> BinaryProblem:
     """jnp BinaryProblem for the engine (vmap-safe, shape-static).
 
     ``backend`` routes the per-node coverage pass (see module docstring);
     ``stats_fn`` overrides it entirely (tests inject counting wrappers).
+    Under ``backend="pallas"`` (without a ``stats_fn`` override) the
+    problem also carries ``evaluate_batch``: all W lanes' coverage passes
+    fuse into ONE ``domination_stats`` kernel launch per engine step
+    (DESIGN.md §5.5).
     """
     n, w = graph.n, graph.words
     cadj = jnp.asarray(_closed_adj(graph))
     fullm = jnp.asarray(full_mask(n))
     one = jnp.uint32(1)
+    batched = backend == "pallas" and stats_fn is None
     if stats_fn is None:
         stats_fn = make_domination_stats_fn(graph, backend, tile=tile,
                                             interpret=interpret)
@@ -151,10 +159,8 @@ def make_dominating_set(graph: Graph, backend: str = "jnp", *,
         return DSState(dominated=jnp.zeros(w, jnp.uint32), cand=fullm,
                        chosen=jnp.zeros(w, jnp.uint32), size=jnp.int32(0))
 
-    def evaluate(state: DSState, best: jnp.ndarray) -> NodeEval:
-        # THE one coverage pass (DESIGN.md §5.4): best |N[v] \ dominated|
-        # over candidates, its vertex, and the undominated count.
-        best_cov, v, u = stats_fn(state.dominated, state.cand)
+    def _finish(state: DSState, best: jnp.ndarray, best_cov, v,
+                u) -> NodeEval:
         is_sol = u == 0
 
         # Bound from the shared coverage maximum.
@@ -174,9 +180,30 @@ def make_dominating_set(graph: Graph, backend: str = "jnp", *,
         return NodeEval(is_solution=is_sol, value=state.size, lower_bound=lb,
                         left=left, right=right, payload=state.chosen)
 
+    def evaluate(state: DSState, best: jnp.ndarray) -> NodeEval:
+        # THE one coverage pass (DESIGN.md §5.4): best |N[v] \ dominated|
+        # over candidates, its vertex, and the undominated count.
+        best_cov, v, u = stats_fn(state.dominated, state.cand)
+        return _finish(state, best, best_cov, v, u)
+
+    evaluate_batch = None
+    if batched:
+        from repro.kernels import ops
+
+        def evaluate_batch(states: DSState, best: jnp.ndarray) -> NodeEval:
+            # ONE kernel launch covers every lane's coverage pass: the
+            # whole uint32[L, w] mask block is batched into each grid step
+            # instead of one pallas_call per lane (DESIGN.md §5.5).
+            out = ops.domination_stats(cadj, states.dominated, states.cand,
+                                       fullm, tile=tile, use_pallas=True,
+                                       interpret=interpret)
+            return jax.vmap(_finish)(states, best, out[:, 0],
+                                     jnp.maximum(out[:, 1], 0), out[:, 2])
+
     return BinaryProblem(
         name=f"ds[{graph.name}]", max_depth=n, root=root, evaluate=evaluate,
-        payload_zero=lambda: jnp.zeros(w, jnp.uint32))
+        payload_zero=lambda: jnp.zeros(w, jnp.uint32),
+        evaluate_batch=evaluate_batch)
 
 
 def make_dominating_set_py(graph: Graph) -> PyProblem:

@@ -68,9 +68,12 @@ StatsFn = Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 
 
 def make_degree_stats_fn(graph: Graph, backend: str = "jnp", *,
-                         tile: int = 128,
+                         tile: Optional[int] = None,
                          interpret: Optional[bool] = None) -> StatsFn:
-    """Build the per-node degree-statistics function for ``backend``."""
+    """Build the per-node degree-statistics function for ``backend``.
+
+    ``tile=None`` defers the kernel block shape to the per-shape autotuner
+    (DESIGN.md §5.6)."""
     n, w = graph.n, graph.words
     adj = jnp.asarray(graph.adj)                      # uint32[n, w]
 
@@ -78,8 +81,7 @@ def make_degree_stats_fn(graph: Graph, backend: str = "jnp", *,
         from repro.kernels import ops
 
         def stats(alive: jnp.ndarray):
-            out = ops.degree_stats(adj, alive[None, :],
-                                   tile=min(tile, max(n, 8)),
+            out = ops.degree_stats(adj, alive[None, :], tile=tile,
                                    use_pallas=True, interpret=interpret)[0]
             # Kernel reports vertex -1 when nothing is alive; the jnp argmax
             # reports 0.  Normalize so both backends yield identical (and
@@ -123,17 +125,23 @@ def _pack_vc(graph: Graph, n: int):
     doc="minimum vertex cover by max-degree branching (paper §V)",
 )
 def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
-                      tile: int = 128, interpret: Optional[bool] = None,
+                      tile: Optional[int] = None,
+                      interpret: Optional[bool] = None,
                       stats_fn: Optional[StatsFn] = None) -> BinaryProblem:
     """jnp BinaryProblem for the engine (vmap-safe, shape-static).
 
     ``backend`` routes the per-node degree pass (see module docstring);
     ``stats_fn`` overrides it entirely (tests inject counting wrappers).
+    Under ``backend="pallas"`` (without a ``stats_fn`` override) the
+    problem also carries ``evaluate_batch``: all W lanes' degree passes
+    fuse into ONE ``degree_stats`` kernel launch per engine step
+    (DESIGN.md §5.5).
     """
     n, w = graph.n, graph.words
     adj = jnp.asarray(graph.adj)
     one = jnp.uint32(1)
     fullm = jnp.asarray(full_mask(n))
+    batched = backend == "pallas" and stats_fn is None
     if stats_fn is None:
         stats_fn = make_degree_stats_fn(graph, backend, tile=tile,
                                         interpret=interpret)
@@ -147,9 +155,8 @@ def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
         return VCState(alive=fullm, cover=jnp.zeros(w, jnp.uint32),
                        size=jnp.int32(0))
 
-    def evaluate(state: VCState, best: jnp.ndarray) -> NodeEval:
-        dmax, v, m2 = stats_fn(state.alive)           # the ONE degree pass
-
+    def _finish(state: VCState, best: jnp.ndarray, dmax, v,
+                m2) -> NodeEval:
         # Solution test: the residual graph has no edges left.
         edgeless = dmax <= 0
 
@@ -175,12 +182,30 @@ def make_vertex_cover(graph: Graph, backend: str = "jnp", *,
                         lower_bound=lb, left=left, right=right,
                         payload=state.cover)
 
+    def evaluate(state: VCState, best: jnp.ndarray) -> NodeEval:
+        dmax, v, m2 = stats_fn(state.alive)           # the ONE degree pass
+        return _finish(state, best, dmax, v, m2)
+
+    evaluate_batch = None
+    if batched:
+        from repro.kernels import ops
+
+        def evaluate_batch(states: VCState, best: jnp.ndarray) -> NodeEval:
+            # ONE kernel launch covers every lane's degree pass: the whole
+            # uint32[L, w] alive block is batched into each grid step
+            # instead of one pallas_call per lane (DESIGN.md §5.5).
+            out = ops.degree_stats(adj, states.alive, tile=tile,
+                                   use_pallas=True, interpret=interpret)
+            return jax.vmap(_finish)(states, best, out[:, 0],
+                                     jnp.maximum(out[:, 1], 0), out[:, 2])
+
     return BinaryProblem(
         name=f"vc[{graph.name}]",
         max_depth=n,
         root=root,
         evaluate=evaluate,
         payload_zero=lambda: jnp.zeros(w, jnp.uint32),
+        evaluate_batch=evaluate_batch,
     )
 
 

@@ -126,12 +126,17 @@ class StackedSpec:
             family=np.zeros((self.k,), np.int32))
 
     def bind(self, tables: StackedTables, backend: str = "jnp", *,
-             tile: int = 128,
+             tile: Optional[int] = None,
              interpret: Optional[bool] = None) -> BinaryProblem:
         """Build the K-instance BinaryProblem over (possibly traced) tables.
 
         ``backend`` routes the shared masked-popcount pass (see module
         docstring) — "jnp" or "pallas"; both are NodeEval-identical.
+        Under "pallas" the problem also carries ``evaluate_batch``, the
+        fused-round fast path: all W lanes' masked-popcount passes become
+        ONE ``stacked_count_stats`` launch per engine step (DESIGN.md
+        §5.5).  ``tile=None`` defers the block shape to the per-shape
+        autotuner (DESIGN.md §5.6).
         """
         n, w, k = self.n, self.words, self.k
         word = jnp.asarray(np.arange(n, dtype=np.int32) // 32)
@@ -142,7 +147,6 @@ class StackedSpec:
 
         if backend == "pallas":
             from repro.kernels import ops
-            ktile = min(tile, max(n, 8))
 
             def shared_stats(i, mask, validm, undom):
                 # undom is recomputed by the kernel as the pass's mask
@@ -150,7 +154,7 @@ class StackedSpec:
                 # the undominated set; VC lanes never consume it).
                 out = ops.stacked_count_stats(
                     tables.adj, i[None], mask[None, :], validm[None, :],
-                    tile=ktile, use_pallas=True, interpret=interpret)[0]
+                    tile=tile, use_pallas=True, interpret=interpret)[0]
                 return out[0], jnp.maximum(out[1], 0), out[2], out[3]
         elif backend == "jnp":
             def shared_stats(i, mask, validm, undom):
@@ -181,21 +185,28 @@ class StackedSpec:
                 c=zero_mask,
                 size=jnp.int32(0))
 
-        def evaluate(state: SvcState, best: jnp.ndarray) -> NodeEval:
-            i = jnp.clip(state.inst, 0, k - 1)
-            fullm_i = tables.fullm[i]
-            is_vc = tables.family[i] == FAMILY_VC
+        def _stats_inputs(state: SvcState):
+            """The shared pass's operands, per lane (clipped instance id —
+            idle lanes evaluate against slot 0 and are discarded, so the
+            scalar and batched paths agree bitwise).
 
-            # THE one shared pass: masked popcount over the slot's rows
-            # (backend-pluggable, DESIGN.md §5.3).
-            # VC: mask = alive set      → counts = residual degrees.
-            # DS: mask = undominated set → counts = coverage |N[v] \ dom|.
-            undom = jnp.bitwise_and(fullm_i, jnp.bitwise_not(state.a))
+            VC: mask = alive set       → counts = residual degrees.
+            DS: mask = undominated set → counts = coverage |N[v] \\ dom|.
+            """
+            i = jnp.clip(state.inst, 0, k - 1)
+            is_vc = tables.family[i] == FAMILY_VC
+            undom = jnp.bitwise_and(tables.fullm[i],
+                                    jnp.bitwise_not(state.a))
             mask = jnp.where(is_vc, state.a, undom)
             validm = jnp.where(is_vc, state.a, state.b)   # alive / candidates
-            cmax, v, csum, u = shared_stats(i, mask, validm, undom)
+            return i, mask, validm, undom
 
-            # Family-specific solution test + admissible bound.
+        def _finish(state: SvcState, best: jnp.ndarray, cmax, v, csum,
+                    u) -> NodeEval:
+            """Everything after the shared pass: family-specific solution
+            test, admissible bound, and both children."""
+            i = jnp.clip(state.inst, 0, k - 1)
+            is_vc = tables.family[i] == FAMILY_VC
             vc_sol = cmax <= 0
             d_eff = jnp.maximum(cmax, 1)
             vc_lb = state.size + (csum + 2 * d_eff - 1) // (2 * d_eff)
@@ -242,6 +253,26 @@ class StackedSpec:
                 right=tree_select(is_vc, vc_right, ds_right),
                 payload=jnp.where(is_vc, state.b, state.c))
 
+        def evaluate(state: SvcState, best: jnp.ndarray) -> NodeEval:
+            i, mask, validm, undom = _stats_inputs(state)
+            cmax, v, csum, u = shared_stats(i, mask, validm, undom)
+            return _finish(state, best, cmax, v, csum, u)
+
+        evaluate_batch = None
+        if backend == "pallas":
+            def evaluate_batch(states: SvcState,
+                               best: jnp.ndarray) -> NodeEval:
+                # ONE kernel launch covers every lane's shared pass: the
+                # stacked kernel batches the whole [L, w] mask block into
+                # each grid step instead of one pallas_call per lane.
+                i, mask, validm, _ = jax.vmap(_stats_inputs)(states)
+                out = ops.stacked_count_stats(
+                    tables.adj, i, mask, validm, tile=tile,
+                    use_pallas=True, interpret=interpret)
+                return jax.vmap(_finish)(
+                    states, best, out[:, 0], jnp.maximum(out[:, 1], 0),
+                    out[:, 2], out[:, 3])
+
         return BinaryProblem(
             name=f"stacked[k={k},n={n}]",
             max_depth=n,
@@ -250,4 +281,5 @@ class StackedSpec:
             payload_zero=lambda: jnp.zeros((w,), jnp.uint32),
             num_instances=k,
             instance_root=instance_root,
+            evaluate_batch=evaluate_batch,
         )

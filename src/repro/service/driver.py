@@ -110,26 +110,30 @@ class SolverService:
 
     def __init__(self, *, max_n: int, slots: int, num_lanes: int,
                  steps_per_round: int = 64, backend: str = "jnp",
-                 scheduler: Union[str, SchedulingPolicy] = "priority"):
+                 scheduler: Union[str, SchedulingPolicy] = "priority",
+                 fused_steps: int = 1):
         warnings.warn(
             "direct SolverService(...) construction is deprecated; use "
             "repro.solver.Solver(SolverConfig(...)).serve(max_n=..., "
             "slots=...)", DeprecationWarning, stacklevel=2)
         self._init(max_n=max_n, slots=slots, num_lanes=num_lanes,
                    steps_per_round=steps_per_round, backend=backend,
-                   scheduler=scheduler)
+                   scheduler=scheduler, fused_steps=fused_steps)
 
     @classmethod
     def from_config(cls, config, *, max_n: int, slots: int,
                     on_event: Optional[Callable[[Any], None]] = None
                     ) -> "SolverService":
         """The facade constructor: lanes / steps_per_round / backend /
-        scheduler come from a :class:`repro.solver.SolverConfig`."""
+        scheduler / fused_steps come from a
+        :class:`repro.solver.SolverConfig`."""
         return cls._create(max_n=max_n, slots=slots,
                            num_lanes=config.lanes,
                            steps_per_round=config.steps_per_round,
                            backend=config.backend,
-                           scheduler=config.scheduler, on_event=on_event)
+                           scheduler=config.scheduler,
+                           fused_steps=getattr(config, "fused_steps", 1),
+                           on_event=on_event)
 
     @classmethod
     def _create(cls, **kwargs) -> "SolverService":
@@ -140,11 +144,13 @@ class SolverService:
     def _init(self, *, max_n: int, slots: int, num_lanes: int,
               steps_per_round: int = 64, backend: str = "jnp",
               scheduler: Union[str, SchedulingPolicy] = "priority",
+              fused_steps: int = 1,
               on_event: Optional[Callable[[Any], None]] = None):
         self.spec = StackedSpec(n=max_n, k=slots)
         self.num_lanes = num_lanes
         self.steps_per_round = steps_per_round
         self.backend = backend                # shared-evaluate kernel backend
+        self.fused_steps = fused_steps        # S steps per expand iteration
         self.on_event = on_event              # ProgressEvent stream (§6)
         self.tables = self.spec.empty_tables()           # host numpy
         self._tables_dev: Optional[StackedTables] = None
@@ -152,8 +158,8 @@ class SolverService:
         spec = self.spec
 
         def _round(lanes, tables):
-            return make_round(spec.bind(tables, backend), steps_per_round)(
-                lanes)
+            return make_round(spec.bind(tables, backend), steps_per_round,
+                              fused_steps=fused_steps)(lanes)
 
         def _rebuild(lanes, tables):
             return ckpt.rebuild_stacks(spec.bind(tables, backend), lanes)

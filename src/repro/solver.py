@@ -85,6 +85,10 @@ class SolverConfig:
         "fifo" — ``repro.service.scheduler.SCHEDULERS``), validated
         against the registered policies when the config meets
         :meth:`Solver.serve`.
+      fused_steps: engine steps fused per expand-loop iteration (S; the
+        multi-step round kernel of DESIGN.md §5.5).  Tree-identical for
+        any S — it only amortizes per-step dispatch — so it is a pure
+        execution knob like ``backend``.
     """
 
     lanes: int = 32
@@ -99,6 +103,7 @@ class SolverConfig:
     checkpoint_path: Optional[str] = None
     resume_from: Optional[str] = None
     scheduler: str = "priority"
+    fused_steps: int = 1
 
     def __post_init__(self):
         if self.lanes < 1:
@@ -123,6 +128,9 @@ class SolverConfig:
         if not isinstance(self.scheduler, str) or not self.scheduler:
             raise ConfigError(
                 f"scheduler must be a policy name, got {self.scheduler!r}")
+        if self.fused_steps < 1:
+            raise ConfigError(
+                f"fused_steps must be >= 1, got {self.fused_steps}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,16 +251,20 @@ class Solver:
         bootstrap_rounds = cfg.bootstrap_rounds
 
         if mesh is None:
-            round_fn = jax.jit(make_round(problem, cfg.steps_per_round))
-            boot_fn = (jax.jit(make_round(problem, cfg.bootstrap_steps))
+            round_fn = jax.jit(make_round(problem, cfg.steps_per_round,
+                                          fused_steps=cfg.fused_steps))
+            boot_fn = (jax.jit(make_round(problem, cfg.bootstrap_steps,
+                                          fused_steps=cfg.fused_steps))
                        if bootstrap_rounds else None)
             total_lanes = cfg.lanes
         else:
             n_dev = int(np.prod(mesh.devices.shape))
             round_fn = make_distributed_round(
-                problem, mesh, cfg.steps_per_round, cfg.max_ship)
+                problem, mesh, cfg.steps_per_round, cfg.max_ship,
+                fused_steps=cfg.fused_steps)
             boot_fn = (make_distributed_round(
-                problem, mesh, cfg.bootstrap_steps, cfg.max_ship)
+                problem, mesh, cfg.bootstrap_steps, cfg.max_ship,
+                fused_steps=cfg.fused_steps)
                 if bootstrap_rounds else None)
             total_lanes = cfg.lanes * n_dev
 

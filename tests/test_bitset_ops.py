@@ -132,9 +132,13 @@ def test_stacked_count_stats_matches_numpy(lanes, tile):
     got = bitset_ops.stacked_count_stats(
         jnp.asarray(tables), jnp.asarray(inst), jnp.asarray(mask),
         jnp.asarray(valid), tile=tile)
-    want = np.stack([np_count_stats(tables[max(int(i), 0)],
-                                    mask[l:l + 1], valid[l:l + 1])[0]
-                     for l, i in enumerate(inst)])
+    # NO_INSTANCE (-1) lanes are PARKED: no table traffic, outputs the
+    # empty-pass row (-1, -1, 0, 0) — never instance 0's stats.
+    want = np.stack([
+        np.array([-1, -1, 0, 0], np.int32) if int(i) < 0
+        else np_count_stats(tables[int(i)], mask[l:l + 1],
+                            valid[l:l + 1])[0]
+        for l, i in enumerate(inst)])
     np.testing.assert_array_equal(np.asarray(got), want)
     np.testing.assert_array_equal(
         np.asarray(ref.stacked_count_stats_ref(
