@@ -3,11 +3,39 @@
 from __future__ import annotations
 
 import csv
+import datetime
 import os
+import platform
+import subprocess
 import time
 from typing import Dict, Iterable, List
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def bench_meta() -> Dict[str, str]:
+    """Provenance stamp for BENCH_*.json rows: when, what code, what stack.
+
+    A benchmark number without its commit and library versions cannot be
+    compared across runs; every suite attaches this block under ``meta``.
+    """
+    import jax
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    return {
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": sha or "unknown",
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
 
 
 def write_csv(name: str, rows: List[Dict], field_order: Iterable[str]):

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed, write_csv
+from benchmarks.common import bench_meta, timed, write_csv
 from repro import registry
 from repro.core.api import INF_VALUE
 from repro.kernels import bitset_ops, ref
@@ -297,6 +297,7 @@ def main(quick: bool = False, gate: bool = False) -> None:
                   f"{int(GATE_REGRESSION * 100)}% — baseline NOT updated")
             sys.exit(1)
 
+    node_eval["meta"] = bench_meta()
     if quick:
         sub = dict(merged.get("quick") or {})
         sub.update(node_eval)

@@ -15,11 +15,16 @@ CSV artifacts land in benchmarks/artifacts/.
 from __future__ import annotations
 
 import argparse
+import glob
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks import (fig10_steal_traffic, kernel_micro, roofline_table,
                         service_latency, service_throughput,
                         table1_vertex_cover, table2_dominating_set)
+from benchmarks.common import ART_DIR
 
 SUITES = [
     ("table1", table1_vertex_cover.main),
@@ -30,6 +35,29 @@ SUITES = [
     ("service", service_throughput.main),
     ("latency", service_latency.main),
 ]
+
+
+def trace_reports() -> None:
+    """Summarize every trace a suite left behind (DESIGN.md §8).
+
+    Suites that run with telemetry write JSONL traces under
+    ``artifacts/traces/``; each one gets a sibling ``.report.txt`` from
+    ``tools/trace_report.py`` — the standard load-balance artifact.  A
+    schema violation (exit 2) fails the whole harness run.
+    """
+    tool = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools", "trace_report.py")
+    for trace in sorted(glob.glob(os.path.join(ART_DIR, "traces",
+                                               "*.jsonl"))):
+        proc = subprocess.run([sys.executable, tool, trace],
+                              capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"trace_report failed on {trace}:\n{proc.stderr}")
+        report = trace[:-len(".jsonl")] + ".report.txt"
+        with open(report, "w") as f:
+            f.write(proc.stdout)
+        print(f"trace report -> {report}", flush=True)
 
 
 def main() -> None:
@@ -45,6 +73,7 @@ def main() -> None:
         print(f"== {name} ==", flush=True)
         fn(quick=args.quick)
         print(f"== {name} done in {time.time()-t0:.1f}s ==", flush=True)
+    trace_reports()
 
 
 if __name__ == "__main__":

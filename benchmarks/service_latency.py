@@ -29,7 +29,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_meta, write_csv
 from repro import registry
 from repro.problems import gnp_graph
 from repro.service import SolveRequest, TicketStatus
@@ -165,6 +165,7 @@ def main(quick: bool = False) -> None:
                     merged = json.load(f)
             except ValueError:
                 merged = {}
+        out["meta"] = bench_meta()
         merged["latency"] = out
         with open(OUT, "w") as f:
             json.dump(merged, f, indent=1)

@@ -31,7 +31,7 @@ import json
 import os
 import time
 
-from benchmarks.common import write_csv
+from benchmarks.common import ART_DIR, bench_meta, write_csv
 from repro import registry
 from repro.problems import gnp_graph, random_regularish_graph
 from repro.service import SolveRequest
@@ -84,10 +84,12 @@ def run_sequential(mix, oracles) -> float:
     return wall
 
 
-def run_service(mix, oracles, backend: str = "jnp") -> float:
+def run_service(mix, oracles, backend: str = "jnp",
+                trace_path: str = None, metrics: bool = False) -> float:
     max_n = max(g.n for _, g in mix)
     svc = Solver(SolverConfig(lanes=LANES, steps_per_round=STEPS,
-                              backend=backend)).serve(max_n=max_n,
+                              backend=backend, trace_path=trace_path,
+                              metrics=metrics)).serve(max_n=max_n,
                                                       slots=SLOTS)
     reqs = [SolveRequest(rid=i, graph=g, family=fam)
             for i, (fam, g) in enumerate(mix)]
@@ -124,13 +126,32 @@ def run(quick: bool = False, backend: str = "jnp") -> dict:
         out[key] = {"wall_s": round(svc, 3),
                     "instances_per_sec": round(k / svc, 3)}
         out["speedup" if b == "jnp" else f"speedup_{b}"] = round(seq / svc, 2)
+        if b == "jnp":
+            # Telemetry-overhead leg (DESIGN.md §8): same drain with the
+            # metrics registry + JSONL trace on — the acceptance bar is
+            # < 5% regression over the plain service leg.  The trace
+            # doubles as the standard report artifact for this suite
+            # (tools/trace_report.py, wired by benchmarks/run.py).
+            trace_dir = os.path.join(ART_DIR, "traces")
+            os.makedirs(trace_dir, exist_ok=True)
+            trace_path = os.path.join(trace_dir, "service_throughput.jsonl")
+            tele = run_service(mix, oracles, backend=b,
+                               trace_path=trace_path, metrics=True)
+            out["service_telemetry"] = {
+                "wall_s": round(tele, 3),
+                "instances_per_sec": round(k / tele, 3),
+                "overhead_vs_service": round(tele / svc - 1.0, 4),
+                "trace": os.path.relpath(trace_path,
+                                         os.path.dirname(ART_DIR)),
+            }
+    out["meta"] = bench_meta()
     return out
 
 
 def main(quick: bool = False, backend: str = "jnp") -> None:
     out = run(quick, backend)
-    modes = [m for m in ("sequential", "service", "service_pallas")
-             if m in out]
+    modes = [m for m in ("sequential", "service", "service_telemetry",
+                         "service_pallas") if m in out]
     rows = [{"mode": m, "wall_s": out[m]["wall_s"],
              "instances_per_sec": out[m]["instances_per_sec"]}
             for m in modes]

@@ -62,6 +62,7 @@ def save(path: str, lanes: Lanes,
         "t_s": np.asarray(lanes.t_s, dtype=np.int32),
         "t_r": np.asarray(lanes.t_r, dtype=np.int32),
         "donated": np.asarray(lanes.donated, dtype=np.int32),
+        "t_c": np.asarray(lanes.t_c, dtype=np.int32),
         "steps": np.asarray(lanes.steps, dtype=np.int32),
     }
     for i, leaf in enumerate(payload_leaves):
@@ -134,7 +135,9 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
         while f"payload_{i}" in z:
             payload_leaves.append(z[f"payload_{i}"])
             i += 1
-        stats = {k: z[k] for k in ("nodes", "t_s", "t_r", "donated")}
+        # t_c is absent from pre-telemetry checkpoints: carry what exists.
+        stats = {k: z[k] for k in ("nodes", "t_s", "t_r", "donated", "t_c")
+                 if k in z}
         steps = int(z["steps"])
 
     lanes = init_lanes(problem, num_lanes, seed_root=False)
@@ -176,7 +179,8 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
         nodes=lanes.nodes.at[0].add(carry["nodes"]),
         t_s=lanes.t_s.at[0].add(carry["t_s"]),
         t_r=lanes.t_r.at[0].add(carry["t_r"]),
-        donated=lanes.donated.at[0].add(carry["donated"]))
+        donated=lanes.donated.at[0].add(carry["donated"]),
+        t_c=lanes.t_c.at[0].add(carry.get("t_c", 0)))
 
     pool = [PendingTask(idx[k].copy(), int(depth[k]), int(base[k]),
                         int(inst[k]))

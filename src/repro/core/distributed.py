@@ -57,6 +57,7 @@ class SolveStats(NamedTuple):
     t_r: int           # total task requests (paper's T_R numerator)
     donated: int
     lanes: int
+    t_c: int = 0       # tasks received cross-device (subset of t_s)
 
 
 def _axis_rank(axis_names: Sequence[str]) -> jnp.ndarray:
@@ -150,7 +151,8 @@ def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
     rinst = jnp.where(claim, w_inst[src], 0)
 
     lanes = lanes._replace(t_r=lanes.t_r + thieves.astype(jnp.int32))
-    return steal.install_tasks(problem, lanes, rbits, rdepth, rinst, claim)
+    return steal.install_tasks(problem, lanes, rbits, rdepth, rinst, claim,
+                               cross=True)
 
 
 def make_round(problem: BinaryProblem, steps_per_round: int,

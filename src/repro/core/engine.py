@@ -64,6 +64,9 @@ class Lanes(NamedTuple):
     t_s: jnp.ndarray          # int32 [W]    — tasks received (paper's T_S)
     t_r: jnp.ndarray          # int32 [W]    — task requests made (paper's T_R)
     donated: jnp.ndarray      # int32 [W]    — tasks donated
+    t_c: jnp.ndarray          # int32 [W]    — tasks received CROSS-device
+                              #               (a subset of t_s; telemetry
+                              #               splits steal traffic by scope)
     steps: jnp.ndarray        # int32 []     — engine steps executed
 
 
@@ -112,6 +115,7 @@ def init_lanes(problem: BinaryProblem, num_lanes: int,
         t_s=jnp.zeros((w,), jnp.int32).at[0].set(1 if seed_root else 0),
         t_r=jnp.zeros((w,), jnp.int32),
         donated=jnp.zeros((w,), jnp.int32),
+        t_c=jnp.zeros((w,), jnp.int32),
         steps=jnp.int32(0),
     )
 

@@ -132,7 +132,7 @@ def extract_tasks(lanes: Lanes, quota: jnp.ndarray, max_tasks: int
 
 def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
                   tdepth: jnp.ndarray, tinst: jnp.ndarray,
-                  valid: jnp.ndarray) -> Lanes:
+                  valid: jnp.ndarray, cross: bool = False) -> Lanes:
     """Install per-LANE task rows (FIXINDEX was applied at extraction).
 
     Row ``i`` goes to lane ``i`` — callers route tasks to specific thief
@@ -140,7 +140,9 @@ def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
     lanes).  Receiving lanes replay the index through ``Problem.apply``
     (CONVERTINDEX) from the root of the task's instance to rebuild their
     state stack, then resume as owners of the stolen subtree (base = task
-    depth).
+    depth).  ``cross`` (a static flag, True from ``cross_device_steal``)
+    additionally bumps the receiver's ``t_c`` counter so telemetry can
+    split steal traffic into intra- vs cross-device scope.
     """
     my_valid = valid & ~lanes.active
 
@@ -153,6 +155,7 @@ def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
         new_stack, lanes.stack)
 
     idx = jnp.where(my_valid[:, None], bits, lanes.idx)
+    recv = my_valid.astype(jnp.int32)
     return lanes._replace(
         idx=idx,
         depth=jnp.where(my_valid, tdepth, lanes.depth),
@@ -160,7 +163,8 @@ def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
         inst=jnp.where(my_valid, tinst, lanes.inst),
         active=lanes.active | my_valid,
         stack=stack,
-        t_s=lanes.t_s + my_valid.astype(jnp.int32),
+        t_s=lanes.t_s + recv,
+        t_c=lanes.t_c + recv if cross else lanes.t_c,
     )
 
 

@@ -100,6 +100,11 @@ def main() -> None:
                     help="rounds between mid-run checkpoints (0 = final only)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the service from --ckpt before serving")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL service trace (repro.obs schema; "
+                         "summarize with tools/trace_report.py)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="collect in-process metrics and print a summary")
     args = ap.parse_args()
 
     if args.resume and not args.ckpt:
@@ -110,7 +115,9 @@ def main() -> None:
         svc = SolverService.restore(args.ckpt, num_lanes=args.lanes,
                                     steps_per_round=args.steps_per_round,
                                     backend=args.backend,
-                                    scheduler=args.scheduler)
+                                    scheduler=args.scheduler,
+                                    trace_path=args.trace,
+                                    metrics=args.metrics)
         print(f"restored service: slots={svc.slot_rid} "
               f"queue={len(svc.queue)} pool={len(svc.pool)} "
               f"rounds={svc.rounds} scheduler={svc.sched.policy.name}")
@@ -126,7 +133,8 @@ def main() -> None:
         config = SolverConfig(lanes=args.lanes,
                               steps_per_round=args.steps_per_round,
                               backend=args.backend,
-                              scheduler=args.scheduler or "priority")
+                              scheduler=args.scheduler or "priority",
+                              trace_path=args.trace, metrics=args.metrics)
         svc = Solver(config).serve(max_n=max_n, slots=args.slots)
         rid0 = 0
     reqs = [SolveRequest(rid=rid0 + i, graph=g, family=fam, **kwargs)
@@ -143,6 +151,7 @@ def main() -> None:
                 and svc.rounds % args.ckpt_every == 0):
             svc.save(args.ckpt)
     wall = time.time() - t0
+    svc.finalize_trace()          # manual step loop: write the summary row
     by_rid = {q.rid: q for q in reqs}
     # Pre-ticket checkpoints restore in-flight slots without tickets, so
     # report over tickets AND results.
@@ -166,6 +175,16 @@ def main() -> None:
     print(f"drained {len(served)} requests ({done} exact) in "
           f"{svc.rounds} rounds, {wall:.2f}s -> "
           f"{done / max(wall, 1e-9):.2f} instances/s")
+    if args.metrics:
+        snap = svc.metrics()
+        util = snap.value("lane_utilization")
+        steals = snap.value("steal_received", scope="intra")
+        print(f"metrics: nodes={snap.value('engine_nodes')} "
+              f"dispatches={snap.value('engine_dispatches')} "
+              f"util={util:.3f} steals intra={steals} "
+              f"queue_depth={snap.value('service_queue_depth')}")
+    if args.trace:
+        print(f"trace -> {args.trace}")
     if args.ckpt:
         svc.save(args.ckpt)
         print(f"service checkpoint -> {args.ckpt}")

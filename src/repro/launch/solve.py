@@ -43,6 +43,11 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a JSONL search trace (repro.obs schema; "
+                         "summarize with tools/trace_report.py)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="collect in-process metrics and print a summary")
     args = ap.parse_args()
 
     # Capability check is registry data, not per-problem branching
@@ -64,15 +69,27 @@ def main() -> None:
         backend=args.backend, bootstrap_rounds=4, bootstrap_steps=8,
         checkpoint_every=args.ckpt_every if args.ckpt else 0,
         checkpoint_path=args.ckpt,
-        resume_from=args.ckpt if args.resume else None)
+        resume_from=args.ckpt if args.resume else None,
+        trace_path=args.trace, metrics=args.metrics)
     handle = registry.problem(args.problem, instance)
     print(f"{args.problem}[{spec.label(instance)}]: lanes={args.lanes} "
           f"backend={args.backend}")
     t0 = time.time()
-    result = Solver(config).solve(handle)
+    solver = Solver(config)
+    result = solver.solve(handle)
     stats = result.stats
     print(f"optimum={stats.best} rounds={stats.rounds} nodes={stats.nodes} "
           f"T_S={stats.t_s} T_R={stats.t_r} wall={time.time()-t0:.1f}s")
+    if args.metrics:
+        snap = solver.metrics()
+        util = snap.value("lane_utilization")
+        steals = snap.value("steal_received", scope="intra")
+        cross = snap.value("steal_received", scope="cross")
+        print(f"metrics: nodes={snap.value('engine_nodes')} "
+              f"dispatches={snap.value('engine_dispatches')} "
+              f"util={util:.3f} steals intra={steals} cross={cross}")
+    if args.trace:
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

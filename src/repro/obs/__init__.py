@@ -1,0 +1,41 @@
+"""Search telemetry for the solver (DESIGN.md §8).
+
+Three small host-side layers, wired through ``repro.solver.Solver`` and
+``repro.service.SolverService`` behind ``SolverConfig.metrics`` /
+``SolverConfig.trace_path``:
+
+* :mod:`repro.obs.registry` — a lightweight metrics registry
+  (counters / gauges / histograms with labels) whose disabled form hands
+  out shared no-op instruments, so instrumentation is zero-cost when
+  telemetry is off;
+* :mod:`repro.obs.trace` — the JSONL trace writer and the per-kind record
+  schema it validates against (``tools/trace_report.py`` consumes these
+  traces and re-validates with the same tables);
+* :mod:`repro.obs.collect` — the per-round collector both drivers call at
+  round boundaries.  Every number it reports is derived on the host from
+  arrays the round loop already materializes (lane counters, the
+  open-work vector, the incumbent table), so collection adds no device
+  syncs to the hot path and the search tree is bit-identical with
+  telemetry on or off (asserted in ``tests/test_obs.py``).
+"""
+
+from repro.obs.collect import RoundCollector
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                MetricsSnapshot)
+from repro.obs.trace import (TRACE_KINDS, TRACE_SCHEMA_VERSION, TraceError,
+                             TraceWriter, read_trace, validate_record)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MetricsSnapshot",
+    "RoundCollector",
+    "TRACE_KINDS",
+    "TRACE_SCHEMA_VERSION",
+    "TraceError",
+    "TraceWriter",
+    "read_trace",
+    "validate_record",
+]

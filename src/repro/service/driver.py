@@ -125,7 +125,7 @@ class SolverService:
                     on_event: Optional[Callable[[Any], None]] = None
                     ) -> "SolverService":
         """The facade constructor: lanes / steps_per_round / backend /
-        scheduler / fused_steps come from a
+        scheduler / fused_steps / telemetry come from a
         :class:`repro.solver.SolverConfig`."""
         return cls._create(max_n=max_n, slots=slots,
                            num_lanes=config.lanes,
@@ -133,6 +133,8 @@ class SolverService:
                            backend=config.backend,
                            scheduler=config.scheduler,
                            fused_steps=getattr(config, "fused_steps", 1),
+                           trace_path=getattr(config, "trace_path", None),
+                           metrics=getattr(config, "metrics", False),
                            on_event=on_event)
 
     @classmethod
@@ -145,6 +147,7 @@ class SolverService:
               steps_per_round: int = 64, backend: str = "jnp",
               scheduler: Union[str, SchedulingPolicy] = "priority",
               fused_steps: int = 1,
+              trace_path: Optional[str] = None, metrics: bool = False,
               on_event: Optional[Callable[[Any], None]] = None):
         self.spec = StackedSpec(n=max_n, k=slots)
         self.num_lanes = num_lanes
@@ -181,6 +184,36 @@ class SolverService:
         self.results: Dict[int, RequestResult] = _ResultMap()
         self.pool: List[ckpt.PendingTask] = []
         self.rounds = 0
+
+        # Telemetry (DESIGN.md §8): one RoundCollector rides the service,
+        # fed host-side at round boundaries — no extra device syncs.
+        self.metrics_enabled = bool(metrics)
+        self._collector = None
+        if metrics or trace_path is not None:
+            from repro import obs
+            self._collector = obs.RoundCollector(
+                mode="service", lanes=num_lanes, slots=slots,
+                steps_per_round=steps_per_round, fused_steps=fused_steps,
+                backend=backend,
+                trace=obs.TraceWriter(trace_path) if trace_path else None)
+            self._collector.start(self.lanes)
+
+    def metrics(self):
+        """``repro.obs.MetricsSnapshot`` of this service's registry, or
+        None when telemetry is off (enable via
+        ``SolverConfig(metrics=True)`` or ``trace_path=...``)."""
+        return (self._collector.snapshot()
+                if self._collector is not None else None)
+
+    def finalize_trace(self) -> None:
+        """Append a trace ``summary`` record (per-lane / per-instance
+        totals so far).  Called automatically by :meth:`drain`; call it
+        directly when stepping rounds by hand.  Idempotent — readers use
+        the last summary."""
+        if self._collector is not None:
+            self._collector.finish(
+                rounds=self.rounds,
+                best=[int(b) for b in np.asarray(self.lanes.best)])
 
     # -- host/device plumbing ----------------------------------------------
 
@@ -244,6 +277,9 @@ class SolverService:
                 reason = f"node_budget must be >= 1, got {request.node_budget}"
         if reason is not None:
             self._emit("reject", rid=request.rid, reason=reason)
+            if self._collector is not None:
+                self._collector.lifecycle("reject", round_no=self.rounds,
+                                          rid=request.rid, reason=reason)
             raise AdmissionError(reason)
         return self.sched.enqueue(request, now_round=self.rounds,
                                   service=self)
@@ -267,12 +303,25 @@ class SolverService:
             best = result.optimum
         self.sched.resolve(rid, TicketStatus.CANCELLED, self.rounds)
         self._emit("cancel", rid=rid, best=best)
+        self._note_lifecycle("cancel", rid, best=best)
         return True
 
     def _emit(self, kind: str, **kw) -> None:
-        if self.on_event is not None:
-            from repro.solver import ProgressEvent
-            self.on_event(ProgressEvent(kind=kind, round=self.rounds, **kw))
+        # One emission path for both drivers (repro.solver.emit): kind is
+        # validated against EVENT_KINDS, so typos raise instead of flowing.
+        from repro.solver import emit
+        emit(self.on_event, kind, round=self.rounds, **kw)
+
+    def _note_lifecycle(self, kind: str, rid: int,
+                        best: Optional[int] = None) -> None:
+        """Trace a terminal request transition with its wait/run rounds."""
+        if self._collector is None:
+            return
+        ticket = self.sched.tickets.get(rid)
+        self._collector.lifecycle(
+            kind, round_no=self.rounds, rid=rid, best=best,
+            waited=ticket.wait_rounds if ticket is not None else None,
+            ran=ticket.run_rounds if ticket is not None else None)
 
     def _host_lane_fields(self):
         l = self.lanes
@@ -363,6 +412,11 @@ class SolverService:
             h["t_s"][lane] += 1
             changed = True
             self._emit("admit", rid=req.rid)
+            if self._collector is not None:
+                self._collector.lifecycle(
+                    "admit", round_no=self.rounds, rid=req.rid, slot=slot,
+                    waited=(ticket.wait_rounds if ticket is not None
+                            else None))
 
         # Retarget remaining idle lanes round-robin over live slots so the
         # next steal round can feed them (instance-scoped thieves).
@@ -411,6 +465,8 @@ class SolverService:
                 retired_round=self.rounds)
             self.sched.resolve(rid, TicketStatus.DONE, self.rounds)
             self._emit("retire", rid=rid, best=self.results[rid].optimum)
+            self._note_lifecycle("retire", rid,
+                                 best=self.results[rid].optimum)
             self.slot_rid[slot] = -1
             # Unbind the retired slot's (now idle) lanes.
             if h_inst is None:
@@ -464,10 +520,12 @@ class SolverService:
                 admitted_round=-1, retired_round=self.rounds,
                 status="expired")
             self._emit("expire", rid=rid)
+            self._note_lifecycle("expire", rid)
         for rid in running:
             result = self._evict_slot(self.slot_rid.index(rid), "expired")
             self.sched.resolve(rid, TicketStatus.EXPIRED, self.rounds)
             self._emit("expire", rid=rid, best=result.optimum)
+            self._note_lifecycle("expire", rid, best=result.optimum)
 
     def _emit_incumbents(self) -> None:
         """Per-request anytime incumbent stream: one ``incumbent`` event
@@ -492,24 +550,46 @@ class SolverService:
         """One service cycle: admit → round → retire → evict.
         Returns the per-slot open-work vector."""
         track = self.sched.track_nodes()
-        self._admit_and_place()
-        nodes_before = np.asarray(self.lanes.nodes).copy() if track else None
+        col = self._collector
+        changed = self._admit_and_place()
+        if col is not None:
+            # Host-side surgery (admission seeds, pool installs) bumps t_s
+            # — refresh the baseline so steal deltas cover the jitted
+            # round only.
+            col.before_round(self.lanes, dirty=changed)
+            nodes_before = None
+        else:
+            nodes_before = (np.asarray(self.lanes.nodes).copy()
+                            if track else None)
         lanes, open_vec = self._round(self.lanes, self._tables_jnp())
         self.lanes = lanes
         self.rounds += 1
         open_np = np.asarray(open_vec)
+        inst_delta = None
+        if col is not None:
+            inst_delta = col.after_round(
+                self.rounds, self.lanes, int(open_np.sum()),
+                queue_depth=self.sched.queue_depth(),
+                slot_rids=self.slot_rid)
         if track:
             # Round-granular attribution: a lane's node delta this round is
             # charged to the instance it serves at the round boundary.
-            delta = np.asarray(self.lanes.nodes) - nodes_before
-            inst = np.asarray(self.lanes.inst)
+            # The collector computes exactly this delta already — reuse it
+            # rather than paying a second readback.
+            if inst_delta is None:
+                delta = np.asarray(self.lanes.nodes) - nodes_before
+                inst = np.asarray(self.lanes.inst)
+                inst_delta = np.zeros((self.spec.k,), np.int64)
+                for slot in range(self.spec.k):
+                    inst_delta[slot] = int(delta[inst == slot].sum())
             for slot in range(self.spec.k):
                 rid = self.slot_rid[slot]
-                if rid >= 0:
-                    used = int(delta[inst == slot].sum())
-                    if used:
-                        self.sched.note_nodes(rid, used)
-        self._emit("round", open_work=int(open_np.sum()))
+                if rid >= 0 and inst_delta[slot]:
+                    self.sched.note_nodes(rid, int(inst_delta[slot]))
+        self._emit("round", open_work=int(open_np.sum()),
+                   metrics=(col.snapshot()
+                            if col is not None and self.metrics_enabled
+                            and self.on_event is not None else None))
         self._emit_incumbents()
         self._retire(open_np)
         self._expire()
@@ -524,6 +604,7 @@ class SolverService:
                     f"service did not drain in {max_rounds} rounds; "
                     f"slots={self.slot_rid} queue={len(self.queue)}")
             self.step_round()
+        self.finalize_trace()
         return self.results
 
     def run(self, requests: Optional[List[SolveRequest]] = None,
@@ -621,7 +702,8 @@ class SolverService:
     @classmethod
     def restore(cls, path: str, *, num_lanes: int,
                 steps_per_round: int = 64, backend: str = "jnp",
-                scheduler: Optional[Union[str, SchedulingPolicy]] = None
+                scheduler: Optional[Union[str, SchedulingPolicy]] = None,
+                trace_path: Optional[str] = None, metrics: bool = False
                 ) -> "SolverService":
         """Rebuild the service onto ``num_lanes`` lanes (elastic W' ≠ W).
 
@@ -645,7 +727,8 @@ class SolverService:
         svc = cls._create(max_n=n, slots=k, num_lanes=num_lanes,
                           steps_per_round=steps_per_round, backend=backend,
                           scheduler=(meta["scheduler"] if scheduler is None
-                                     else scheduler))
+                                     else scheduler),
+                          trace_path=trace_path, metrics=metrics)
         svc.tables = StackedTables(
             adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
             family=extra["family"].copy())
@@ -659,6 +742,10 @@ class SolverService:
         svc.slot_rid = [int(r) for r in extra["slot_rid"]]
         svc.slot_admitted = [int(r) for r in extra["slot_admitted"]]
         svc.rounds = int(extra["rounds"])
+        if svc._collector is not None:
+            # Re-baseline on the restored lanes so the first round's deltas
+            # exclude the carried checkpoint totals.
+            svc._collector.start(svc.lanes)
         if "slot_best_seen" in extra:     # keep the incumbent stream exact
             svc._slot_best_seen = [int(b) for b in extra["slot_best_seen"]]
 

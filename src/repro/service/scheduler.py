@@ -196,6 +196,10 @@ class Scheduler:
     def __len__(self) -> int:
         return len(self.policy)
 
+    def queue_depth(self) -> int:
+        """Number of requests waiting for admission (telemetry gauge)."""
+        return len(self.policy)
+
     def adopt(self, ticket: Ticket) -> None:
         """Index an externally built ticket (checkpoint restore)."""
         self.tickets[ticket.rid] = ticket

@@ -144,6 +144,28 @@ class Ticket:
         """True once the ticket is terminal (DONE, CANCELLED or EXPIRED)."""
         return self.status in TERMINAL
 
+    @property
+    def wait_rounds(self) -> Optional[int]:
+        """Rounds spent QUEUED before admission.
+
+        For a ticket that left the queue without ever running (queue-expired
+        or cancelled while queued) this is the full submitted→finished span.
+        None while the ticket is still queued.
+        """
+        if self.admitted_round is not None:
+            return self.admitted_round - self.submitted_round
+        if self.finished_round is not None:
+            return self.finished_round - self.submitted_round
+        return None
+
+    @property
+    def run_rounds(self) -> Optional[int]:
+        """Rounds spent RUNNING (admission → terminal); None until both
+        endpoints are known (never-admitted tickets stay None)."""
+        if self.admitted_round is None or self.finished_round is None:
+            return None
+        return self.finished_round - self.admitted_round
+
     def result(self, timeout: Optional[float] = None) -> RequestResult:
         """Drive the owning service until this ticket resolves.
 

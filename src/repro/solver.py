@@ -49,12 +49,14 @@ from repro.core.serial import serial_rb
 
 __all__ = [
     "ConfigError",
+    "EVENT_KINDS",
     "OracleResult",
     "ProgressEvent",
     "SolveResult",
     "Solver",
     "SolverConfig",
     "SolveStats",
+    "emit",
 ]
 
 
@@ -89,6 +91,16 @@ class SolverConfig:
         multi-step round kernel of DESIGN.md §5.5).  Tree-identical for
         any S — it only amortizes per-step dispatch — so it is a pure
         execution knob like ``backend``.
+      trace_path: write a JSONL telemetry trace here (``repro.obs.trace``
+        schema; render with ``tools/trace_report.py``).  Collection is
+        host-side from values the round loop already materializes, so the
+        search tree is bit-identical with tracing on or off (DESIGN.md
+        §8).
+      metrics: collect an in-process metrics registry, queryable as a
+        ``MetricsSnapshot`` via ``Solver.metrics()`` /
+        ``SolverService.metrics()`` and attached to "round"/"done"
+        :class:`ProgressEvent`\\ s.  Same host-side-only guarantee as
+        ``trace_path``.
     """
 
     lanes: int = 32
@@ -104,6 +116,8 @@ class SolverConfig:
     resume_from: Optional[str] = None
     scheduler: str = "priority"
     fused_steps: int = 1
+    trace_path: Optional[str] = None
+    metrics: bool = False
 
     def __post_init__(self):
         if self.lanes < 1:
@@ -131,6 +145,19 @@ class SolverConfig:
         if self.fused_steps < 1:
             raise ConfigError(
                 f"fused_steps must be >= 1, got {self.fused_steps}")
+        if self.trace_path is not None and (
+                not isinstance(self.trace_path, str) or not self.trace_path):
+            raise ConfigError(
+                f"trace_path must be a path, got {self.trace_path!r}")
+
+
+#: Every ProgressEvent kind either driver may emit.  Frozen on purpose:
+#: constructing an event with any other kind raises, so a typo'd kind
+#: fails at the emitter instead of flowing silently past consumers.
+EVENT_KINDS = frozenset({
+    "round", "checkpoint", "admit", "incumbent", "retire", "reject",
+    "cancel", "expire", "done",
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +180,9 @@ class ProgressEvent:
       "expire"     — request ``rid`` hit its deadline or node budget and
                      was evicted with ``best`` as its anytime result;
       "done"       — the solve drained (``best`` is the global optimum).
+
+    ``metrics`` carries a ``repro.obs.MetricsSnapshot`` on "round"/"done"
+    events when ``SolverConfig.metrics`` is set (None otherwise).
     """
 
     kind: str
@@ -163,10 +193,33 @@ class ProgressEvent:
     path: Optional[str] = None
     reason: Optional[str] = None
     lanes: Optional[Lanes] = None
+    metrics: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(
+                f"unknown ProgressEvent kind {self.kind!r} (known: "
+                f"{', '.join(sorted(EVENT_KINDS))})")
 
 
 #: Event-consumer signature shared by both drivers.
 EventCallback = Callable[[ProgressEvent], None]
+
+
+def emit(on_event: Optional[EventCallback], kind: str, **fields) -> None:
+    """The ONE ProgressEvent emission path for both drivers.
+
+    Validates ``kind`` against :data:`EVENT_KINDS` unconditionally (a
+    typo'd kind raises even with nobody listening), then constructs and
+    delivers the event only when a listener is attached — emission stays
+    free on the hot path when ``on_event`` is None.
+    """
+    if kind not in EVENT_KINDS:
+        raise ValueError(
+            f"unknown ProgressEvent kind {kind!r} (known: "
+            f"{', '.join(sorted(EVENT_KINDS))})")
+    if on_event is not None:
+        on_event(ProgressEvent(kind=kind, **fields))
 
 
 class SolveResult(NamedTuple):
@@ -197,6 +250,13 @@ class Solver:
                  on_event: Optional[EventCallback] = None):
         self.config = config or SolverConfig()
         self.on_event = on_event
+        self._obs = None          # RoundCollector of the most recent solve
+
+    def metrics(self):
+        """``repro.obs.MetricsSnapshot`` of the most recent (or running)
+        :meth:`solve`, or None when telemetry was off (enable with
+        ``SolverConfig(metrics=True)`` or ``trace_path=...``)."""
+        return self._obs.snapshot() if self._obs is not None else None
 
     # -- problem resolution -------------------------------------------------
 
@@ -286,6 +346,19 @@ class Solver:
         if mesh is not None:
             lanes = _shard_lanes(lanes, mesh)
 
+        collector = None
+        if cfg.metrics or cfg.trace_path is not None:
+            from repro import obs
+            collector = obs.RoundCollector(
+                mode="solve", lanes=total_lanes,
+                slots=problem.num_instances,
+                steps_per_round=cfg.steps_per_round,
+                fused_steps=cfg.fused_steps, backend=cfg.backend,
+                trace=(obs.TraceWriter(cfg.trace_path)
+                       if cfg.trace_path else None))
+            collector.start(lanes)      # after restore: deltas = this run
+        self._obs = collector
+
         def feed_pool(lanes):
             nonlocal pool
             if pool:
@@ -295,32 +368,45 @@ class Solver:
                     lanes = _shard_lanes(lanes, mesh)
             return lanes
 
-        def emit(kind: str, **kw) -> None:
-            if self.on_event is not None:
-                self.on_event(ProgressEvent(kind=kind, **kw))
+        def snap():
+            return (collector.snapshot()
+                    if collector is not None and cfg.metrics else None)
 
         rounds, done = 0, False
         for _ in range(bootstrap_rounds):
+            fed = bool(pool)
             lanes = feed_pool(lanes)
+            if collector is not None:
+                collector.before_round(lanes, dirty=fed)
             lanes, open_work = boot_fn(lanes) if boot_fn else round_fn(lanes)
             rounds += 1
-            if int(jnp.sum(open_work)) == 0 and not pool:
+            open_now = int(jnp.sum(open_work))
+            if collector is not None:
+                collector.after_round(rounds, lanes, open_now)
+            if open_now == 0 and not pool:
                 done = True
                 break
         while not done and rounds < cfg.max_rounds:
+            fed = bool(pool)
             lanes = feed_pool(lanes)
+            if collector is not None:
+                collector.before_round(lanes, dirty=fed)
             lanes, open_work = round_fn(lanes)
             rounds += 1
             open_now = int(jnp.sum(open_work))
+            if collector is not None:
+                collector.after_round(rounds, lanes, open_now)
             if self.on_event is not None:
                 # The incumbent readback costs a device sync — only pay it
                 # when someone is listening.
-                emit("round", round=rounds, open_work=open_now,
-                     best=int(jnp.min(lanes.best)), lanes=lanes)
+                emit(self.on_event, "round", round=rounds,
+                     open_work=open_now, best=int(jnp.min(lanes.best)),
+                     lanes=lanes, metrics=snap())
             if (cfg.checkpoint_every and cfg.checkpoint_path
                     and rounds % cfg.checkpoint_every == 0):
                 ckpt.save(cfg.checkpoint_path, _gather_lanes(lanes))
-                emit("checkpoint", round=rounds, path=cfg.checkpoint_path)
+                emit(self.on_event, "checkpoint", round=rounds,
+                     path=cfg.checkpoint_path)
             if open_now == 0 and not pool:
                 done = True
 
@@ -332,8 +418,14 @@ class Solver:
             t_r=int(jnp.sum(lanes.t_r)),
             donated=int(jnp.sum(lanes.donated)),
             lanes=int(lanes.active.shape[0]),
+            t_c=int(jnp.sum(lanes.t_c)),
         )
-        emit("done", round=rounds, open_work=0, best=stats.best)
+        if collector is not None:
+            collector.finish(rounds=rounds,
+                             best=[int(b) for b in np.asarray(lanes.best)])
+            collector.close()
+        emit(self.on_event, "done", round=rounds, open_work=0,
+             best=stats.best, metrics=snap())
         best_payload = jax.tree_util.tree_map(np.asarray, lanes.best_payload)
         if problem.num_instances == 1:
             # Single-instance API: drop the K=1 incumbent-table dim.

@@ -17,7 +17,7 @@ import pytest
 
 from repro.core import checkpoint as ckpt
 from repro.core.api import BinaryProblem, INF_VALUE
-from repro.core.distributed import solve
+from _legacy import legacy_solve as solve
 from repro.core.engine import init_lanes, make_expand
 from repro.core.serial import serial_rb
 from repro.problems import (

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.distributed import solve
+from _legacy import legacy_solve as solve
 from repro.core.serial import serial_rb
 from repro.problems import (make_vertex_cover, make_vertex_cover_py,
                             random_regularish_graph)

@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core.api import INF_VALUE, BinaryProblem
-from repro.core.distributed import solve
+from _legacy import legacy_solve as solve
 from repro.core.engine import init_lanes, make_expand
 from repro.core.serial import serial_rb
 from repro.problems import (

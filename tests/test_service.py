@@ -22,6 +22,7 @@ from repro.core.engine import NO_INSTANCE, init_lanes
 from repro.core.serial import serial_rb
 from repro.problems import (gnp_graph, make_dominating_set_py,
                             make_vertex_cover_py, random_regularish_graph)
+from _legacy import legacy_service
 from repro.service import SolveRequest, SolverService
 from repro.service.batch_problem import StackedSpec, pack_instance
 
@@ -78,7 +79,7 @@ def run_requests(svc):
 
 @pytest.mark.parametrize("lanes", [8, 32])
 def test_service_matches_serial_oracles(lanes):
-    svc = SolverService(max_n=18, slots=4, num_lanes=lanes,
+    svc = legacy_service(max_n=18, slots=4, num_lanes=lanes,
                         steps_per_round=16)
     _, results = run_requests(svc)
     for i, (family, graph) in enumerate(MIX):
@@ -134,7 +135,7 @@ def test_stacked_bind_rejects_unknown_backend():
 def test_service_pallas_backend_matches_serial_oracles():
     """Full continuous-batching drain through the batched stacked kernel:
     every tenant still lands exactly on its serial optimum."""
-    svc = SolverService(max_n=18, slots=4, num_lanes=8, steps_per_round=16,
+    svc = legacy_service(max_n=18, slots=4, num_lanes=8, steps_per_round=16,
                         backend="pallas")
     _, results = run_requests(svc)
     for i, (family, graph) in enumerate(MIX):
@@ -146,7 +147,7 @@ def test_service_pallas_backend_matches_serial_oracles():
 def test_service_backend_crosses_checkpoints(tmp_path):
     """Save under jnp, restore under pallas (backend is an execution choice,
     not checkpoint state — driver docstring): identical results."""
-    svc = SolverService(max_n=18, slots=4, num_lanes=8, steps_per_round=4)
+    svc = legacy_service(max_n=18, slots=4, num_lanes=8, steps_per_round=4)
     for i, (f, g) in enumerate(MIX):
         svc.submit(SolveRequest(rid=i, graph=g, family=f))
     svc.step_round()
@@ -167,7 +168,7 @@ def test_service_elastic_restore_midrun(w_before, w_after, tmp_path):
     """Forced mid-run elastic restore: save with K instances in flight on
     W lanes, restore onto W' != W, drain — every instance still reaches
     its serial optimum and the pending pool empties."""
-    svc = SolverService(max_n=18, slots=4, num_lanes=w_before,
+    svc = legacy_service(max_n=18, slots=4, num_lanes=w_before,
                         steps_per_round=4)
     for i, (f, g) in enumerate(MIX):
         svc.submit(SolveRequest(rid=i, graph=g, family=f))
@@ -192,7 +193,7 @@ def test_service_continuous_batching_reuses_slots():
     and every backlogged request must still be exact."""
     reqs = [SolveRequest(rid=100 + i, graph=g, family=f)
             for i, (f, g) in enumerate(MIX * 2)]
-    svc = SolverService(max_n=18, slots=2, num_lanes=8, steps_per_round=16)
+    svc = legacy_service(max_n=18, slots=2, num_lanes=8, steps_per_round=16)
     for r in reqs:
         svc.submit(r)
     results = svc.drain()
@@ -205,7 +206,7 @@ def test_service_continuous_batching_reuses_slots():
 
 def test_submit_rejects_unregistered_family():
     from repro.service import AdmissionError
-    svc = SolverService(max_n=18, slots=2, num_lanes=4)
+    svc = legacy_service(max_n=18, slots=2, num_lanes=4)
     with pytest.raises(AdmissionError, match="unknown problem family"):
         svc.submit(SolveRequest(rid=0, graph=MIX[0][1], family="tsp"))
     assert not svc.queue                      # nothing silently enqueued
@@ -216,14 +217,14 @@ def test_submit_rejects_unservable_family():
     the failure is a typed AdmissionError at submit(), not a crash deep
     inside table packing."""
     from repro.service import AdmissionError
-    svc = SolverService(max_n=18, slots=2, num_lanes=4)
+    svc = legacy_service(max_n=18, slots=2, num_lanes=4)
     with pytest.raises(AdmissionError, match="not servable"):
         svc.submit(SolveRequest(rid=0, graph=MIX[0][1], family="ss"))
 
 
 def test_submit_rejects_oversized_instance():
     from repro.service import AdmissionError
-    svc = SolverService(max_n=14, slots=2, num_lanes=4)
+    svc = legacy_service(max_n=14, slots=2, num_lanes=4)
     with pytest.raises(AdmissionError, match="max_n"):
         svc.submit(SolveRequest(rid=0, graph=gnp_graph(20, 0.3, seed=1),
                                 family="vc"))

@@ -90,13 +90,22 @@ def test_resume_elastic_lane_count_through_facade(tmp_path):
 # -- deprecation shims: warn, and stay bitwise-identical ----------------------
 
 
+def _exactly_one(record, match: str) -> None:
+    """The shim must warn EXACTLY once per call — not zero (silent
+    un-deprecation), not twice (a refactor double-warning)."""
+    hits = [w for w in record if issubclass(w.category, DeprecationWarning)
+            and match in str(w.message)]
+    assert len(hits) == 1, [str(w.message) for w in record]
+
+
 def test_legacy_solve_warns_and_matches_facade():
     prob = VC.build()
-    with pytest.warns(DeprecationWarning, match="repro.solver.Solver"):
+    with pytest.warns(DeprecationWarning, match="repro.solver.Solver") as rec:
         payload, stats, _ = legacy_solve(prob, num_lanes=8,
                                          steps_per_round=16,
                                          bootstrap_rounds=2,
                                          bootstrap_steps=4)
+    _exactly_one(rec, "repro.core.distributed.solve")
     res = Solver(CFG).solve(VC)
     assert isinstance(res, SolveResult)
     assert stats == res.stats                     # full SolveStats equality
@@ -111,31 +120,38 @@ def test_legacy_service_warns_and_matches_facade():
            ("ds", gnp_graph(14, 0.25, seed=2))]
     reqs = [SolveRequest(rid=i, graph=g, family=f)
             for i, (f, g) in enumerate(mix)]
-    with pytest.warns(DeprecationWarning, match="serve"):
+    with pytest.warns(DeprecationWarning, match="serve") as rec:
         legacy = SolverService(max_n=14, slots=2, num_lanes=8,
                                steps_per_round=16)
-    with pytest.warns(DeprecationWarning, match="Ticket"):
+    _exactly_one(rec, "direct SolverService")
+    with pytest.warns(DeprecationWarning, match="Ticket") as rec:
         old = legacy.run(list(reqs))
+    _exactly_one(rec, "SolverService.run")
     svc = Solver(SolverConfig(lanes=8, steps_per_round=16)).serve(
         max_n=14, slots=2)
     tickets = [svc.submit(r) for r in reqs]
-    with pytest.warns(DeprecationWarning, match="int rid"):
-        assert [int(t) for t in tickets] == [r.rid for r in reqs]
+    with pytest.warns(DeprecationWarning, match="int rid") as rec:
+        assert int(tickets[0]) == reqs[0].rid
+    _exactly_one(rec, "treating a Ticket")
+    assert [t.rid for t in tickets] == [r.rid for r in reqs]
     new = svc.drain()
     for i in range(len(mix)):
         assert old[i].optimum == new[i].optimum
         np.testing.assert_array_equal(old[i].payload, new[i].payload)
         assert (old[i].admitted_round, old[i].retired_round) == \
                (new[i].admitted_round, new[i].retired_round)
-        assert new[tickets[i]].optimum == new[i].optimum  # int-rid lookup
+        with pytest.warns(DeprecationWarning, match="int rid") as rec:
+            assert new[tickets[i]].optimum == new[i].optimum  # int-rid lookup
+        _exactly_one(rec, "treating a Ticket")
 
 
 def test_legacy_on_round_still_fires_through_event_stream():
     seen = []
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning) as rec:
         legacy_solve(VC.build(), num_lanes=4, steps_per_round=16,
                      on_round=lambda r, lanes, open_work: seen.append(
                          (r, open_work, lanes is not None)))
+    _exactly_one(rec, "repro.core.distributed.solve")
     assert seen and all(ok for _, _, ok in seen)
     assert [r for r, _, _ in seen] == sorted(r for r, _, _ in seen)
 

@@ -288,6 +288,34 @@ def test_cancel_and_expire_events():
     assert [e.rid for e in cancel] == [1]
 
 
+def test_event_order_admit_incumbent_terminal():
+    """Per-request event grammar over a mixed drain: every admitted rid's
+    event sequence is ``admit`` → ``incumbent``* → exactly ONE terminal
+    (``retire`` | ``expire`` | ``cancel``), covering the retirement,
+    deadline-eviction and mid-flight-cancellation paths in one trace
+    (ISSUE 7 satellite)."""
+    events = []
+    svc = serve(slots=2, steps=4, lanes=8, on_event=events.append)
+    svc.submit(SolveRequest(rid=0, graph=EASY[0], family="vc"))
+    svc.submit(SolveRequest(rid=1, graph=HARD, family="vc",
+                            deadline_rounds=2))
+    gone = svc.submit(SolveRequest(rid=2, graph=HARD, family="ds"))
+    for _ in range(50):                 # step until rid 2 holds a slot
+        svc.step_round()
+        if gone.status is TicketStatus.RUNNING:
+            break
+    assert gone.status is TicketStatus.RUNNING
+    gone.cancel()
+    svc.drain()
+    for rid, terminal in ((0, "retire"), (1, "expire"), (2, "cancel")):
+        seq = [e.kind for e in events if e.rid == rid]
+        assert seq and seq[0] == "admit", (rid, seq)
+        assert seq[-1] == terminal, (rid, seq)
+        assert set(seq[1:-1]) <= {"incumbent"}, (rid, seq)
+        assert sum(1 for k in seq
+                   if k in ("retire", "expire", "cancel")) == 1, (rid, seq)
+
+
 # -- checkpointing an un-drained service --------------------------------------
 
 

@@ -1,7 +1,8 @@
 """Public-API surface snapshot for the front-door modules (ISSUE 4/5).
 
-``repro.registry``, ``repro.solver`` and ``repro.service`` (the ticketed
-request-lifecycle surface: Ticket, SchedulingPolicy, SolverService) are
+``repro.registry``, ``repro.solver``, ``repro.service`` (the ticketed
+request-lifecycle surface: Ticket, SchedulingPolicy, SolverService) and
+``repro.obs`` (the telemetry registry + trace schema) are
 THE public API: every launcher, benchmark and downstream user goes
 through them, so their surface must never change silently.  This tool renders each module's
 ``__all__`` — dataclass fields, NamedTuple fields, class methods and
@@ -32,7 +33,7 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
-MODULES = ("repro.registry", "repro.solver", "repro.service")
+MODULES = ("repro.registry", "repro.solver", "repro.service", "repro.obs")
 SNAPSHOT = pathlib.Path(__file__).resolve().parent / "api_surface.txt"
 
 
@@ -45,6 +46,19 @@ def _signature(obj) -> str:
     # snapshot is deterministic across processes.
     return re.sub(r"<(function|bound method) ([^ ]+) at 0x[0-9a-f]+>",
                   r"<\1 \2>", sig)
+
+
+def _const_repr(obj) -> str:
+    # Set/dict iteration order varies per process (hash randomization);
+    # sort so the snapshot is stable.
+    if isinstance(obj, (set, frozenset)):
+        body = ", ".join(repr(x) for x in sorted(obj, key=repr))
+        return f"{type(obj).__name__}({{{body}}})"
+    if isinstance(obj, dict):
+        body = ", ".join(f"{k!r}: {_const_repr(v)}"
+                         for k, v in sorted(obj.items(), key=lambda kv: repr(kv[0])))
+        return f"{{{body}}}"
+    return repr(obj)
 
 
 def _describe_class(name: str, obj: type) -> list:
@@ -84,7 +98,7 @@ def render() -> str:
             elif callable(obj):
                 out.append(f"  def {name}{_signature(obj)}")
             else:
-                out.append(f"  const {name} = {obj!r}")
+                out.append(f"  const {name} = {_const_repr(obj)}")
         out.append("")
     return "\n".join(out)
 
