@@ -65,13 +65,25 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced worker counts / shapes")
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    # Anything after `--` is forwarded to the selected suite's own CLI,
+    # e.g. `python -m benchmarks.run --only service -- --devices 1,2,4`.
+    args, extra = ap.parse_known_args()
+    if extra and extra[0] == "--":
+        extra = extra[1:]
+    if extra and not args.only:
+        raise SystemExit("suite args (`-- ...`) require --only NAME")
     for name, fn in SUITES:
         if args.only and name != args.only:
             continue
         t0 = time.time()
         print(f"== {name} ==", flush=True)
-        fn(quick=args.quick)
+        if extra:
+            mod = sys.modules[fn.__module__]
+            if not hasattr(mod, "cli"):
+                raise SystemExit(f"suite {name} takes no extra args")
+            mod.cli(extra + (["--quick"] if args.quick else []))
+        else:
+            fn(quick=args.quick)
         print(f"== {name} done in {time.time()-t0:.1f}s ==", flush=True)
     trace_reports()
 

@@ -19,12 +19,21 @@ Writes ``BENCH_service.json`` (merge-write, key ``latency``) and a CSV
 artifact; every DONE optimum is asserted against the serial oracle.  The
 trace is deterministic (seeded) so latencies in rounds are reproducible;
 wall-clock numbers are environment-dependent context.
+
+``--devices 1,2,4`` adds the mesh-sharding axis (DESIGN.md §9): the same
+trace replays under the ``priority`` policy with the lane pool sharded
+over N forced host devices (``LANES`` is per device).  Wider pools drain
+the hard head-of-line jobs in fewer rounds, so total rounds and the
+latency percentiles (in rounds — the hardware-neutral unit) must fall;
+the legs run in one subprocess, same pattern as service_throughput.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -83,9 +92,9 @@ def poisson_trace(quick: bool):
     return trace
 
 
-def replay(trace, scheduler: str, oracles) -> dict:
+def replay(trace, scheduler: str, oracles, mesh=None) -> dict:
     svc = Solver(SolverConfig(lanes=LANES, steps_per_round=STEPS,
-                              scheduler=scheduler)).serve(
+                              scheduler=scheduler, mesh=mesh)).serve(
         max_n=max(r.graph.n for _, r in trace), slots=SLOTS)
     pending = sorted(trace, key=lambda a: a[0])
     tickets, t_submit, t_finish = {}, {}, {}
@@ -150,8 +159,78 @@ def run(quick: bool = False) -> dict:
     return out
 
 
-def main(quick: bool = False) -> None:
+# -- mesh device axis (DESIGN.md §9) -----------------------------------------
+
+def _axis_child(devices, quick: bool) -> None:
+    """Subprocess body: replay the trace per device count (priority
+    policy); the parent forced the host device count before spawning."""
+    import jax
+    trace = poisson_trace(quick)
+    oracles = {r.rid: Solver().oracle(registry.problem(r.family,
+                                                       r.graph)).best
+               for _, r in trace}
+    legs = {}
+    for d in devices:
+        assert d <= len(jax.devices()), (d, jax.devices())
+        mesh = (jax.make_mesh((d,), ("workers",),
+                              devices=jax.devices()[:d])
+                if d > 1 else None)
+        rep = replay(trace, "priority", oracles, mesh=mesh)
+        legs[str(d)] = {"devices": d, "lanes_per_device": LANES,
+                        "total_lanes": LANES * d,
+                        "total_rounds": rep["total_rounds"],
+                        "p50_latency_rounds": rep["p50_latency_rounds"],
+                        "p95_latency_rounds": rep["p95_latency_rounds"],
+                        "deadline_hit_rate": rep["deadline_hit_rate"],
+                        "completed": rep["completed"]}
+    print("DEVICES_RESULT " + json.dumps(legs))
+
+
+def run_devices(devices, quick: bool) -> dict:
+    """Spawn the device-axis subprocess; scaling asserted on the total
+    rounds-to-drain of the priority replay (latency percentiles are
+    recorded context — the easy traffic is already near the floor)."""
+    devices = sorted(set(devices))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{max(devices + [2])}")
+    cmd = [sys.executable, "-m", "benchmarks.service_latency",
+           "--_axis-child", ",".join(str(d) for d in devices)]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("DEVICES_RESULT ")][-1]
+    legs = json.loads(line[len("DEVICES_RESULT "):])
+    axis = {
+        "unit": "priority-policy replay; rounds are hardware-neutral, "
+                "wider pools must drain in fewer total rounds",
+        "policy": "priority", "lanes_per_device": LANES,
+        "legs": legs,
+        "meta": bench_meta(),
+    }
+    if "1" in legs:
+        base = legs["1"]
+        for d in devices:
+            leg = legs[str(d)]
+            leg["scaling_rounds"] = round(
+                base["total_rounds"] / leg["total_rounds"], 2)
+            if d > 1:
+                assert leg["total_rounds"] < base["total_rounds"], (
+                    "no rounds-to-drain scaling", d, legs)
+                assert leg["deadline_hit_rate"] >= \
+                    base["deadline_hit_rate"], (d, legs)
+    return axis
+
+
+def main(quick: bool = False, devices=None) -> None:
     out = run(quick)
+    if devices:
+        out["device_axis"] = run_devices(list(devices), quick)
     rows = [{"policy": p, **{k: v for k, v in out[p].items()}}
             for p in POLICIES]
     path = write_csv("service_latency.csv", rows,
@@ -174,9 +253,24 @@ def main(quick: bool = False) -> None:
     print(f"service latency -> {path}")
 
 
-if __name__ == "__main__":
+def cli(argv=None) -> None:
+    """Module CLI; also the pass-through target for
+    ``python -m benchmarks.run --only latency -- <args>``."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    a = ap.parse_args()
-    main(a.quick)
+    ap.add_argument("--devices", default=None,
+                    help="comma list of device counts for the mesh "
+                         "sharding axis, e.g. 1,2,4 (DESIGN.md §9)")
+    ap.add_argument("--_axis-child", dest="axis_child", default=None,
+                    help=argparse.SUPPRESS)
+    a = ap.parse_args(argv)
+    if a.axis_child:
+        _axis_child([int(x) for x in a.axis_child.split(",")], a.quick)
+        return
+    main(a.quick, devices=[int(x) for x in a.devices.split(",")]
+         if a.devices else None)
+
+
+if __name__ == "__main__":
+    cli()

@@ -23,12 +23,25 @@ measurable overhead over the pre-facade drivers.
 body in interpret mode on CPU, so its number is a correctness/regression
 canary, not a speed claim; on TPU it is the compiled kernel.  The JSON is
 merged on write, so recording one backend preserves the other's entry.
+
+``--devices 1,2,4`` adds the mesh-sharding axis (DESIGN.md §9): the same
+instance mix is drained by a service sharded over N forced host devices
+(``--lanes`` stays PER DEVICE, so the total lane pool grows with N).  On
+a CPU host the forced devices share the same cores, so wall-clock cannot
+scale; the hardware-neutral scaling metric is ROUNDS-TO-DRAIN, which
+falls as the lane pool widens.  The legs run in one subprocess (jax
+locks the device count at first init); the 1-device leg is the plain
+``jit`` path and must reproduce the in-process service leg's round count
+exactly — the sharding infrastructure is proven overhead-free where it
+is off.  Results merge-write under the ``device_axis`` key.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 from benchmarks.common import ART_DIR, bench_meta, write_csv
@@ -85,12 +98,14 @@ def run_sequential(mix, oracles) -> float:
 
 
 def run_service(mix, oracles, backend: str = "jnp",
-                trace_path: str = None, metrics: bool = False) -> float:
+                trace_path: str = None, metrics: bool = False,
+                mesh=None, lanes: int = LANES, steps: int = STEPS):
+    """Drain the mix through one service; -> (wall_s, rounds_to_drain)."""
     max_n = max(g.n for _, g in mix)
-    svc = Solver(SolverConfig(lanes=LANES, steps_per_round=STEPS,
+    svc = Solver(SolverConfig(lanes=lanes, steps_per_round=steps,
                               backend=backend, trace_path=trace_path,
-                              metrics=metrics)).serve(max_n=max_n,
-                                                      slots=SLOTS)
+                              metrics=metrics, mesh=mesh)).serve(
+        max_n=max_n, slots=SLOTS)
     reqs = [SolveRequest(rid=i, graph=g, family=fam)
             for i, (fam, g) in enumerate(mix)]
     t0 = time.perf_counter()
@@ -100,7 +115,7 @@ def run_service(mix, oracles, backend: str = "jnp",
     wall = time.perf_counter() - t0
     for i, ((family, graph), want) in enumerate(zip(mix, oracles)):
         assert results[i].optimum == want, (graph.name, results[i].optimum)
-    return wall
+    return wall, svc.rounds
 
 
 def run(quick: bool = False, backend: str = "jnp") -> dict:
@@ -121,10 +136,11 @@ def run(quick: bool = False, backend: str = "jnp") -> dict:
                        "instances_per_sec": round(k / seq, 3)},
     }
     for b in backends:
-        svc = run_service(mix, oracles, backend=b)
+        svc, svc_rounds = run_service(mix, oracles, backend=b)
         key = "service" if b == "jnp" else f"service_{b}"
         out[key] = {"wall_s": round(svc, 3),
-                    "instances_per_sec": round(k / svc, 3)}
+                    "instances_per_sec": round(k / svc, 3),
+                    "rounds": svc_rounds}
         out["speedup" if b == "jnp" else f"speedup_{b}"] = round(seq / svc, 2)
         if b == "jnp":
             # Telemetry-overhead leg (DESIGN.md §8): same drain with the
@@ -135,8 +151,8 @@ def run(quick: bool = False, backend: str = "jnp") -> dict:
             trace_dir = os.path.join(ART_DIR, "traces")
             os.makedirs(trace_dir, exist_ok=True)
             trace_path = os.path.join(trace_dir, "service_throughput.jsonl")
-            tele = run_service(mix, oracles, backend=b,
-                               trace_path=trace_path, metrics=True)
+            tele, _ = run_service(mix, oracles, backend=b,
+                                  trace_path=trace_path, metrics=True)
             out["service_telemetry"] = {
                 "wall_s": round(tele, 3),
                 "instances_per_sec": round(k / tele, 3),
@@ -148,8 +164,113 @@ def run(quick: bool = False, backend: str = "jnp") -> dict:
     return out
 
 
-def main(quick: bool = False, backend: str = "jnp") -> None:
+# -- mesh device axis (DESIGN.md §9) -----------------------------------------
+
+#: Axis legs run a deliberately SMALL per-device pool: with 8 lanes x 8
+#: steps the 1-device drain takes many rounds and lane-pool width is the
+#: binding resource, so adding devices (lanes stay per-device) must cut
+#: rounds-to-drain.  The main LANES x STEPS config drains the mix in a
+#: couple of rounds — no scaling headroom to measure there.
+AX_LANES = 8
+AX_STEPS = 8
+
+
+def _axis_child(devices, quick: bool) -> None:
+    """Subprocess body: run every device leg under forced host devices.
+
+    The parent sets XLA_FLAGS before spawning us; jax locks the device
+    count at first init, so all legs share one process and one mix.  A
+    ``pre_shard`` leg at the MAIN config with mesh=None (the plain jit
+    path) is emitted alongside: it is the identical deterministic
+    computation to the parent's in-process service leg and gates on it.
+    """
+    import jax
+    mix = instance_mix(quick)
+    oracles = [oracle(fam, g) for fam, g in mix]
+    k = len(mix)
+    wall0, rounds0 = run_service(mix, oracles)
+    legs = {}
+    for d in devices:
+        assert d <= len(jax.devices()), (d, jax.devices())
+        mesh = (jax.make_mesh((d,), ("workers",),
+                              devices=jax.devices()[:d])
+                if d > 1 else None)
+        wall, rounds = run_service(mix, oracles, mesh=mesh,
+                                   lanes=AX_LANES, steps=AX_STEPS)
+        legs[str(d)] = {"devices": d, "lanes_per_device": AX_LANES,
+                        "total_lanes": AX_LANES * d, "rounds": rounds,
+                        "wall_s": round(wall, 3),
+                        "instances_per_sec": round(k / wall, 3)}
+    print("DEVICES_RESULT " + json.dumps(
+        {"pre_shard": {"rounds": rounds0, "wall_s": round(wall0, 3)},
+         "legs": legs}))
+
+
+def run_devices(devices, quick: bool, baseline: dict = None) -> dict:
+    """Spawn the device-axis subprocess, check scaling, -> merged section.
+
+    Scaling is asserted on rounds-to-drain (forced host devices share the
+    same CPU cores, so wall-clock is context, not a claim): every d > 1
+    leg must drain the mix in FEWER rounds than the 1-device leg.  The
+    1-device leg is additionally pinned to the in-process service leg's
+    round count — same deterministic computation, so sharding-off must be
+    exactly the pre-shard service.
+    """
+    devices = sorted(set(devices))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{max(devices + [2])}")
+    cmd = [sys.executable, "-m", "benchmarks.service_throughput",
+           "--_axis-child", ",".join(str(d) for d in devices)]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("DEVICES_RESULT ")][-1]
+    res = json.loads(line[len("DEVICES_RESULT "):])
+    legs, pre = res["legs"], res["pre_shard"]
+    axis = {
+        "unit": "rounds-to-drain (hardware-neutral; forced host devices "
+                "share CPU cores, wall_s is context only)",
+        "lanes_per_device": AX_LANES, "steps_per_round": AX_STEPS,
+        "slots": SLOTS,
+        "pre_shard": pre,
+        "legs": legs,
+        "meta": bench_meta(),
+    }
+    if baseline is not None:
+        # Pre-shard noise gate: mesh=None at the main config is the plain
+        # jit path — the identical deterministic search, so the round
+        # count must REPRODUCE the in-process service leg exactly; the
+        # wall band is lenient (fresh-process compile, shared cores).
+        assert pre["rounds"] == baseline["rounds"], (
+            "pre-shard leg diverged from the in-process service leg",
+            pre, baseline)
+        assert pre["wall_s"] < 3.0 * baseline["wall_s"] + 1.0, (
+            "pre-shard leg wall-clock outside the noise band",
+            pre, baseline)
+        axis["pre_shard_matches_service"] = True
+    if "1" in legs:
+        base = legs["1"]
+        for d in devices:
+            leg = legs[str(d)]
+            leg["scaling_rounds"] = round(base["rounds"] / leg["rounds"], 2)
+            if d > 1:
+                assert leg["rounds"] < base["rounds"], (
+                    "no rounds-to-drain scaling", d, legs)
+    return axis
+
+
+def main(quick: bool = False, backend: str = "jnp",
+         devices=None) -> None:
     out = run(quick, backend)
+    if devices:
+        out["device_axis"] = run_devices(list(devices), quick,
+                                         baseline=out.get("service"))
     modes = [m for m in ("sequential", "service", "service_telemetry",
                          "service_pallas") if m in out]
     rows = [{"mode": m, "wall_s": out[m]["wall_s"],
@@ -186,7 +307,9 @@ def main(quick: bool = False, backend: str = "jnp") -> None:
     print(f"service -> {path}")
 
 
-if __name__ == "__main__":
+def cli(argv=None) -> None:
+    """Module CLI; also the pass-through target for
+    ``python -m benchmarks.run --only service -- <args>``."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -194,5 +317,20 @@ if __name__ == "__main__":
                     default="jnp",
                     help="stacked shared-evaluate kernel backend(s) to "
                          "measure (DESIGN.md §5.3)")
-    a = ap.parse_args()
-    main(a.quick, a.backend)
+    ap.add_argument("--devices", default=None,
+                    help="comma list of device counts for the mesh "
+                         "sharding axis, e.g. 1,2,4 (DESIGN.md §9; runs "
+                         "in a subprocess with forced host devices)")
+    ap.add_argument("--_axis-child", dest="axis_child", default=None,
+                    help=argparse.SUPPRESS)
+    a = ap.parse_args(argv)
+    if a.axis_child:
+        _axis_child([int(x) for x in a.axis_child.split(",")], a.quick)
+        return
+    devices = ([int(x) for x in a.devices.split(",")]
+               if a.devices else None)
+    main(a.quick, a.backend, devices=devices)
+
+
+if __name__ == "__main__":
+    cli()

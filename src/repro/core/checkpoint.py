@@ -188,6 +188,65 @@ def restore(path: str, problem: BinaryProblem, num_lanes: int
     return lanes, pool
 
 
+def repartition(problem: BinaryProblem, lanes: Lanes, num_lanes: int
+                ) -> Tuple[Lanes, List[PendingTask]]:
+    """In-memory elastic W → W' re-layout (the checkpoint/restore cycle
+    without the file): the first W' live tasks are installed onto fresh
+    lanes, surplus becomes an instance-tagged pending pool, and aggregate
+    stats are carried on lane 0 — exactly :func:`restore`'s contract.  The
+    service's autoscaling hook uses this to add/remove devices mid-run.
+
+    ``lanes`` must be host-addressable (gather before calling under a
+    mesh); unbound idle lanes (inst == NO_INSTANCE) are dropped — idle
+    lanes of the new pool start unbound.
+    """
+    idx = np.asarray(lanes.idx)
+    depth = np.asarray(lanes.depth)
+    base = np.asarray(lanes.base)
+    inst = np.asarray(lanes.inst)
+    active = np.asarray(lanes.active)
+    stats = {k: int(np.asarray(getattr(lanes, k)).sum())
+             for k in ("nodes", "t_s", "t_r", "donated", "t_c")}
+
+    new = init_lanes(problem, num_lanes, seed_root=False)
+    new = new._replace(
+        inst=jnp.full((num_lanes,), -1, jnp.int32),
+        best=jnp.asarray(np.asarray(lanes.best)),
+        best_payload=jax.tree_util.tree_map(
+            lambda p: jnp.asarray(np.asarray(p)), lanes.best_payload),
+        steps=jnp.asarray(np.asarray(lanes.steps)))
+
+    live = [k for k in range(idx.shape[0]) if active[k]]
+    installed, pending = live[:num_lanes], live[num_lanes:]
+
+    il = new.idx.shape[1]
+    new_idx = np.full((num_lanes, il), int(UNVISITED), np.int8)
+    new_depth = np.zeros((num_lanes,), np.int32)
+    new_base = np.zeros((num_lanes,), np.int32)
+    new_inst = np.full((num_lanes,), -1, np.int32)
+    new_active = np.zeros((num_lanes,), bool)
+    for j, k in enumerate(installed):
+        w = min(il, idx.shape[1])
+        new_idx[j, :w] = idx[k, :w]
+        new_depth[j], new_base[j] = depth[k], base[k]
+        new_inst[j], new_active[j] = inst[k], True
+    new = new._replace(
+        idx=jnp.asarray(new_idx), depth=jnp.asarray(new_depth),
+        base=jnp.asarray(new_base), inst=jnp.asarray(new_inst),
+        active=jnp.asarray(new_active))
+    new = rebuild_stacks(problem, new)
+    new = new._replace(
+        nodes=new.nodes.at[0].add(stats["nodes"]),
+        t_s=new.t_s.at[0].add(stats["t_s"]),
+        t_r=new.t_r.at[0].add(stats["t_r"]),
+        donated=new.donated.at[0].add(stats["donated"]),
+        t_c=new.t_c.at[0].add(stats["t_c"]))
+    pool = [PendingTask(idx[k].copy(), int(depth[k]), int(base[k]),
+                        int(inst[k]))
+            for k in pending]
+    return new, pool
+
+
 def rebuild_stacks(problem: BinaryProblem, lanes: Lanes) -> Lanes:
     """CONVERTINDEX for every active lane: replay path bits to its node.
 

@@ -139,11 +139,8 @@ def cross_device_steal(problem: BinaryProblem, lanes: Lanes,
     thief_offset = (jnp.cumsum(demands, axis=0) - demands)[me]  # [K]
     my_trank = steal._rank_within_instance(thieves, lane_ids, lanes.inst)
     my_grank = thief_offset[safe_inst] + my_trank
-    pair = (thieves[:, None] & w_valid[None, :]
-            & (w_inst[None, :] == safe_inst[:, None])
-            & (w_grank[None, :] == my_grank[:, None]))          # [W, D*S]
-    src = jnp.argmax(pair, axis=1)
-    claim = jnp.any(pair, axis=1)
+    src, claim = steal.claim_tasks(thieves, safe_inst, my_grank,
+                                   w_inst, w_grank, w_valid)
 
     rbits = jnp.where(claim[:, None], w_bits[src].astype(jnp.int8),
                       UNVISITED)
@@ -193,6 +190,23 @@ def make_round(problem: BinaryProblem, steps_per_round: int,
     return round_fn
 
 
+def lane_partition_specs(problem: BinaryProblem,
+                         axis_names: Sequence[str]) -> Lanes:
+    """PartitionSpec pytree for ``Lanes`` under a mesh: lane arrays shard
+    their leading W-dim over all mesh axes; the per-instance incumbent
+    table (``best``, ``best_payload``) and the step clock are replicated.
+    Shared by the solve path, the sharded service driver and the mesh
+    tests."""
+    axes = tuple(axis_names)
+
+    def spec_for(field):
+        return P() if field in ("best", "steps", "best_payload") else P(axes)
+
+    proto = _lanes_proto(problem)
+    return Lanes(**{f: jax.tree_util.tree_map(
+        lambda _: spec_for(f), getattr(proto, f)) for f in Lanes._fields})
+
+
 def make_distributed_round(problem: BinaryProblem, mesh: Mesh,
                            steps_per_round: int, max_ship: int = 16,
                            fused_steps: int = 1):
@@ -200,20 +214,7 @@ def make_distributed_round(problem: BinaryProblem, mesh: Mesh,
     axes = tuple(mesh.axis_names)
     round_fn = make_round(problem, steps_per_round, axes, max_ship,
                           fused_steps)
-
-    # Lane arrays shard their leading W-dim over all mesh axes; scalars
-    # (best, steps) and the incumbent payload are replicated per device.
-    def in_spec_for(field, leaf):
-        if field in ("best", "steps"):
-            return P()
-        if field == "best_payload":
-            return P()
-        return P(axes)
-
-    in_specs = Lanes(**{f: jax.tree_util.tree_map(
-        lambda _: in_spec_for(f, _), getattr(_lanes_proto(problem), f))
-        for f in Lanes._fields})
-
+    in_specs = lane_partition_specs(problem, axes)
     fn = shard_map(round_fn, mesh=mesh, in_specs=(in_specs,),
                    out_specs=(in_specs, P()), check=False)
     return jax.jit(fn)

@@ -79,12 +79,17 @@ def stack_len(problem: BinaryProblem) -> int:
 
 
 def init_lanes(problem: BinaryProblem, num_lanes: int,
-               seed_root: bool = True) -> Lanes:
+               seed_root: bool = True, bind_instance: bool = True) -> Lanes:
     """Allocate W idle lanes; optionally hand lane 0 the root task N_{0,0}.
 
     The paper's initialization assigns the root to C_0 and lets every other
     core request its first task through the virtual topology; here all other
     lanes start idle and are fed by the first steal rounds (bootstrap).
+
+    ``bind_instance=False`` starts every lane UNBOUND (``inst ==
+    NO_INSTANCE``): the multi-tenant service pool, where lanes only acquire
+    an instance at admission/steal time and unbound lanes neither steal nor
+    donate.
     """
     w, il, sl = num_lanes, idx_len(problem), stack_len(problem)
     k = problem.num_instances
@@ -104,7 +109,8 @@ def init_lanes(problem: BinaryProblem, num_lanes: int,
         idx=jnp.full((w, il), UNVISITED, jnp.int8),
         depth=jnp.zeros((w,), jnp.int32),
         base=jnp.zeros((w,), jnp.int32),
-        inst=jnp.zeros((w,), jnp.int32),
+        inst=(jnp.zeros((w,), jnp.int32) if bind_instance
+              else jnp.full((w,), NO_INSTANCE, jnp.int32)),
         active=active,
         stack=stack,
         best=jnp.full((k,), INF_VALUE, jnp.int32),

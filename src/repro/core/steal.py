@@ -130,6 +130,31 @@ def extract_tasks(lanes: Lanes, quota: jnp.ndarray, max_tasks: int
     return lanes, bits.astype(jnp.int8), tdepth, tinst, trank, valid
 
 
+def claim_tasks(thieves: jnp.ndarray, inst: jnp.ndarray,
+                my_grank: jnp.ndarray, w_inst: jnp.ndarray,
+                w_grank: jnp.ndarray, w_valid: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-instance rank-arithmetic claim (cross-device step 4).
+
+    ``thieves``/``inst``/``my_grank`` describe the local lanes (bool[W],
+    int32[W], int32[W]); ``w_inst``/``w_grank``/``w_valid`` describe the
+    gathered world task rows ([D*S]).  Returns ``(src, claim)``: the world
+    row each lane claims (arbitrary where unclaimed) and the claim mask.
+
+    Invariant (the PR-1 bug class, property-tested in
+    ``tests/test_steal_quota.py``): when ``(inst, grank)`` is unique among
+    valid rows and among thieves — which the quota construction guarantees
+    — claims form a bijection between matching rows and thieves, and a
+    thief only ever claims a row of its own instance.
+    """
+    pair = (thieves[:, None] & w_valid[None, :]
+            & (w_inst[None, :] == inst[:, None])
+            & (w_grank[None, :] == my_grank[:, None]))       # [W, D*S]
+    src = jnp.argmax(pair, axis=1)
+    claim = jnp.any(pair, axis=1)
+    return src, claim
+
+
 def install_tasks(problem: BinaryProblem, lanes: Lanes, bits: jnp.ndarray,
                   tdepth: jnp.ndarray, tinst: jnp.ndarray,
                   valid: jnp.ndarray, cross: bool = False) -> Lanes:

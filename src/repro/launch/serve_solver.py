@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve_solver \
       --instances vc:gnp:20:30:5@prio=2,ds:gnp:16:30:7@deadline=60,vc:reg:24:4:1 \
       --lanes 32 --slots 4 [--scheduler sjf] [--backend pallas] \
-      [--ckpt svc.ckpt] [--resume]
+      [--devices 4] [--autoscale 8] [--ckpt svc.ckpt] [--resume]
 
 Each instance spec is ``<family>:<instance>[@<attr>=<v>...]`` where
 ``<family>`` is any *servable* registered problem family
@@ -19,7 +19,10 @@ admission policy (``priority`` default, ``sjf``, ``fifo`` —
 times (distinct request ids) to exercise continuous batching past the
 slot count.  ``--backend pallas`` routes the shared stacked evaluate
 through the batched masked-popcount kernel (DESIGN.md §5.3) — results are
-bitwise-identical to jnp.
+bitwise-identical to jnp.  ``--devices N`` shards the lane pool over the
+first N devices (``--lanes`` is PER DEVICE; DESIGN.md §9) and
+``--autoscale MAXDEV`` lets the service grow/shrink the mesh elastically
+with the admission queue depth.
 
 ``submit()`` returns a Ticket per request; the drain loop reports each
 ticket's terminal status (done / expired / cancelled) and its
@@ -93,6 +96,15 @@ def main() -> None:
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
                     help="shared-evaluate kernel backend (DESIGN.md §5.3)")
     ap.add_argument("--steps-per-round", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the lane pool over the first N devices "
+                         "(--lanes is PER DEVICE; DESIGN.md §9)")
+    ap.add_argument("--max-ship", type=int, default=16,
+                    help="cross-device tasks shipped per device per round")
+    ap.add_argument("--autoscale", type=int, default=0, metavar="MAXDEV",
+                    help="grow/shrink the mesh elastically up to MAXDEV "
+                         "devices, keyed on admission queue depth "
+                         "(starts at --devices)")
     ap.add_argument("--ckpt", default=None,
                     help="service checkpoint path (written every "
                          "--ckpt-every rounds and after the drain)")
@@ -110,14 +122,30 @@ def main() -> None:
     if args.resume and not args.ckpt:
         ap.error("--resume requires --ckpt")
 
+    import jax
+
+    from repro.service.scheduler import AutoscalePolicy
+
+    if args.devices > len(jax.devices()):
+        ap.error(f"--devices {args.devices} > available device count "
+                 f"{len(jax.devices())} (force host devices with "
+                 f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    mesh = (jax.make_mesh((args.devices,), ("workers",),
+                          devices=jax.devices()[:args.devices])
+            if args.devices > 1 else None)
+    autoscale = (AutoscalePolicy(max_devices=args.autoscale)
+                 if args.autoscale > 1 else None)
+
     workload = parse_workload(args.instances, args.repeat)
     if args.resume:
         svc = SolverService.restore(args.ckpt, num_lanes=args.lanes,
                                     steps_per_round=args.steps_per_round,
                                     backend=args.backend,
                                     scheduler=args.scheduler,
+                                    mesh=mesh, max_ship=args.max_ship,
                                     trace_path=args.trace,
                                     metrics=args.metrics)
+        svc.autoscale = autoscale
         print(f"restored service: slots={svc.slot_rid} "
               f"queue={len(svc.queue)} pool={len(svc.pool)} "
               f"rounds={svc.rounds} scheduler={svc.sched.policy.name}")
@@ -134,6 +162,8 @@ def main() -> None:
                               steps_per_round=args.steps_per_round,
                               backend=args.backend,
                               scheduler=args.scheduler or "priority",
+                              mesh=mesh, max_ship=args.max_ship,
+                              autoscale=autoscale,
                               trace_path=args.trace, metrics=args.metrics)
         svc = Solver(config).serve(max_n=max_n, slots=args.slots)
         rid0 = 0
@@ -141,7 +171,8 @@ def main() -> None:
             for i, (fam, g, kwargs) in enumerate(workload)]
     tickets = {r.rid: svc.submit(r) for r in reqs}
 
-    print(f"serving {len(reqs)} requests over {args.lanes} lanes / "
+    print(f"serving {len(reqs)} requests over {svc.num_lanes} lanes "
+          f"({svc.n_devices} device(s) x {svc.lanes_per_device}) / "
           f"{svc.spec.k} slots (padded n={svc.spec.n}, "
           f"backend={svc.backend}, scheduler={svc.sched.policy.name})")
     t0 = time.time()

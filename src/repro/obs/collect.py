@@ -58,7 +58,7 @@ class RoundCollector:
 
     def __init__(self, *, mode: str, lanes: int, slots: int,
                  steps_per_round: int, fused_steps: int = 1,
-                 backend: str = "jnp",
+                 backend: str = "jnp", devices: int = 1,
                  registry: Optional[MetricsRegistry] = None,
                  trace: Optional[TraceWriter] = None):
         if mode not in ("solve", "service"):
@@ -66,6 +66,7 @@ class RoundCollector:
         self.mode = mode
         self.num_lanes = int(lanes)
         self.slots = int(slots)
+        self.devices = max(1, int(devices))   # lane pool partitions (mesh)
         self.fused_steps = max(1, int(fused_steps))
         self.registry = registry if registry is not None else MetricsRegistry()
         self.trace = trace
@@ -91,6 +92,10 @@ class RoundCollector:
         self.h_ship = r.histogram("steal_ship_depth",
                                   "depth of shipped subtree roots",
                                   buckets=_SHIP_BUCKETS)
+        self.g_dev_nodes = r.gauge(
+            "device_nodes", "nodes expanded last round, per device shard")
+        self.g_dev_active = r.gauge(
+            "device_active_lanes", "active lanes at round end, per device")
         if mode == "service":
             self.g_queue = r.gauge("service_queue_depth",
                                    "queued (unadmitted) requests")
@@ -113,7 +118,8 @@ class RoundCollector:
             trace.write("meta", schema=TRACE_SCHEMA_VERSION, mode=mode,
                         lanes=self.num_lanes, slots=self.slots,
                         steps_per_round=int(steps_per_round),
-                        fused_steps=self.fused_steps, backend=backend)
+                        fused_steps=self.fused_steps, backend=backend,
+                        devices=self.devices)
 
     # -- round boundaries ---------------------------------------------------
 
@@ -188,6 +194,16 @@ class RoundCollector:
         if self.mode == "service":
             self.g_queue.set(int(queue_depth))
 
+        # Per-device lane metrics: the pool shards its leading dim evenly
+        # over the mesh, so device d owns lanes [d*W/D, (d+1)*W/D).
+        dev_nodes = dev_active = None
+        if self.devices > 1 and self.num_lanes % self.devices == 0:
+            dev_nodes = d_nodes.reshape(self.devices, -1).sum(axis=1)
+            dev_active = active.reshape(self.devices, -1).sum(axis=1)
+            for d in range(self.devices):
+                self.g_dev_nodes.set(int(dev_nodes[d]), device=d)
+                self.g_dev_active.set(int(dev_active[d]), device=d)
+
         improved = []
         for slot in range(self.slots):
             b = int(best[slot])
@@ -208,11 +224,40 @@ class RoundCollector:
                 steps=d_steps, dispatches=dispatches,
                 inst_nodes=[int(x) for x in inst_delta],
                 ship_depths=ship_depths, best=[int(b) for b in best],
-                queue_depth=int(queue_depth))
+                queue_depth=int(queue_depth),
+                dev_nodes=(None if dev_nodes is None
+                           else [int(x) for x in dev_nodes]),
+                dev_active=(None if dev_active is None
+                            else [int(x) for x in dev_active]))
             for slot, b, rid in improved:
                 self.trace.write("incumbent", round=int(round_no), inst=slot,
                                  best=b, rid=rid)
         return inst_delta
+
+    # -- elastic events -----------------------------------------------------
+
+    def resize(self, num_lanes: int, *, devices: int,
+               round_no: int) -> None:
+        """Re-shape the per-lane accounting after an elastic pool resize.
+
+        Mirrors the engine's carried-counter convention (checkpoint
+        restore / ``repartition`` sum each counter onto lane 0): the
+        accumulated per-lane totals collapse onto lane 0 of the new
+        layout, so the summary ledger — sum(lane_nodes) == nodes ==
+        sum(inst_nodes) — stays exact across any number of resizes.  The
+        delta baseline is dropped; the driver re-baselines via
+        ``before_round(dirty=True)`` on the rebuilt lanes.
+        """
+        self.num_lanes = int(num_lanes)
+        self.devices = max(1, int(devices))
+        for key, old in self._lane.items():
+            carried = np.zeros((self.num_lanes,), np.int64)
+            carried[0] = old.sum()
+            self._lane[key] = carried
+        self._base = None
+        if self.trace is not None:
+            self.trace.write("resize", round=int(round_no),
+                             lanes=self.num_lanes, devices=self.devices)
 
     # -- request lifecycle (service) ----------------------------------------
 

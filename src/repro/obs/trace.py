@@ -23,6 +23,10 @@ schema treats as optional, for forward compatibility):
   expire     round, rid               [best, waited, ran]
   cancel     round, rid               [best, waited, ran]
   reject     round, rid               [reason]
+  resize     round, lanes, devices    — the service re-laid its pool onto
+             a different mesh / lane count (per-lane totals collapse onto
+             lane 0, mirroring the engine's carried counters, so summary
+             ledgers stay reconcilable across elastic events)
   summary    rounds, nodes, lane_nodes, inst_nodes
              [round, best, lane_recv, lane_req, lane_donated,
              lane_cross, steps, dispatches]  — per-lane/-instance totals
@@ -63,6 +67,7 @@ TRACE_KINDS: Dict[str, FrozenSet[str]] = {
     "expire": _LIFECYCLE,
     "cancel": _LIFECYCLE,
     "reject": _LIFECYCLE,
+    "resize": frozenset({"round", "lanes", "devices"}),
     "summary": frozenset({"rounds", "nodes", "lane_nodes", "inst_nodes"}),
 }
 

@@ -14,15 +14,17 @@ from repro.service.batch_problem import (FAMILY_DS, FAMILY_VC,
                                          STACKED_BACKENDS, StackedSpec,
                                          StackedTables, SvcState)
 from repro.service.driver import SolverService
-from repro.service.scheduler import (SCHEDULERS, Fifo, PriorityFifo,
-                                     Scheduler, SchedulingPolicy,
-                                     ShortestJobFirst, make_policy)
+from repro.service.scheduler import (SCHEDULERS, AutoscalePolicy, Fifo,
+                                     PriorityFifo, Scheduler,
+                                     SchedulingPolicy, ShortestJobFirst,
+                                     make_policy)
 from repro.service.ticket import (AdmissionError, RequestResult,
                                   SolveRequest, Ticket, TicketCancelled,
                                   TicketStatus)
 
 __all__ = [
-    "AdmissionError", "FAMILY_DS", "FAMILY_VC", "Fifo", "PriorityFifo",
+    "AdmissionError", "AutoscalePolicy", "FAMILY_DS", "FAMILY_VC",
+    "Fifo", "PriorityFifo",
     "RequestResult", "SCHEDULERS", "STACKED_BACKENDS", "Scheduler",
     "SchedulingPolicy", "ShortestJobFirst", "SolveRequest", "SolverService",
     "StackedSpec", "StackedTables", "SvcState", "Ticket", "TicketCancelled",

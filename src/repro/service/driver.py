@@ -64,15 +64,18 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro import registry
+from repro import compat, registry
 from repro.core import checkpoint as ckpt
 from repro.core.api import INF_VALUE, UNVISITED
-from repro.core.distributed import make_round
+from repro.core.distributed import (_gather_lanes, lane_partition_specs,
+                                    make_round)
 from repro.core.engine import NO_INSTANCE, init_lanes
 from repro.problems.graphs import Graph, num_words
 from repro.service.batch_problem import StackedSpec, StackedTables
-from repro.service.scheduler import (Scheduler, SchedulingPolicy, QueueItem,
+from repro.service.scheduler import (AutoscalePolicy, Scheduler,
+                                     SchedulingPolicy, QueueItem,
                                      make_policy)
 from repro.service.ticket import (TERMINAL, AdmissionError, RequestResult,
                                   SolveRequest, Ticket, TicketStatus)
@@ -133,6 +136,9 @@ class SolverService:
                            backend=config.backend,
                            scheduler=config.scheduler,
                            fused_steps=getattr(config, "fused_steps", 1),
+                           mesh=getattr(config, "mesh", None),
+                           max_ship=getattr(config, "max_ship", 16),
+                           autoscale=getattr(config, "autoscale", None),
                            trace_path=getattr(config, "trace_path", None),
                            metrics=getattr(config, "metrics", False),
                            on_event=on_event)
@@ -146,34 +152,35 @@ class SolverService:
     def _init(self, *, max_n: int, slots: int, num_lanes: int,
               steps_per_round: int = 64, backend: str = "jnp",
               scheduler: Union[str, SchedulingPolicy] = "priority",
-              fused_steps: int = 1,
+              fused_steps: int = 1, mesh: Optional[Mesh] = None,
+              max_ship: int = 16,
+              autoscale: Optional[AutoscalePolicy] = None,
               trace_path: Optional[str] = None, metrics: bool = False,
               on_event: Optional[Callable[[Any], None]] = None):
         self.spec = StackedSpec(n=max_n, k=slots)
-        self.num_lanes = num_lanes
         self.steps_per_round = steps_per_round
         self.backend = backend                # shared-evaluate kernel backend
         self.fused_steps = fused_steps        # S steps per expand iteration
+        self.max_ship = max_ship              # cross-device ship cap / round
         self.on_event = on_event              # ProgressEvent stream (§6)
+        self.autoscale = autoscale            # elasticity policy, or None
         self.tables = self.spec.empty_tables()           # host numpy
         self._tables_dev: Optional[StackedTables] = None
 
-        spec = self.spec
+        # Mesh layout (DESIGN.md §9): ``num_lanes`` is the PER-DEVICE lane
+        # count (SolverConfig.lanes semantics); the pool is partitioned
+        # over the mesh and the round runs under shard_map with the
+        # stacked tables and incumbent state replicated per device.
+        self.mesh = mesh
+        self.n_devices = (int(np.prod(mesh.devices.shape))
+                          if mesh is not None else 1)
+        self.lanes_per_device = num_lanes
+        self.num_lanes = num_lanes * self.n_devices
+        self._build_round_fns()
 
-        def _round(lanes, tables):
-            return make_round(spec.bind(tables, backend), steps_per_round,
-                              fused_steps=fused_steps)(lanes)
-
-        def _rebuild(lanes, tables):
-            return ckpt.rebuild_stacks(spec.bind(tables, backend), lanes)
-
-        self._round = jax.jit(_round)
-        self._rebuild = jax.jit(_rebuild)
-
-        proto = spec.bind(self._tables_jnp())
-        lanes = init_lanes(proto, num_lanes, seed_root=False)
-        self.lanes = lanes._replace(
-            inst=jnp.full((num_lanes,), NO_INSTANCE, jnp.int32))
+        proto = self.spec.bind(self._tables_jnp())
+        self.lanes = init_lanes(proto, self.num_lanes, seed_root=False,
+                                bind_instance=False)
 
         policy = (scheduler if not isinstance(scheduler, str)
                   else make_policy(scheduler))
@@ -192,11 +199,43 @@ class SolverService:
         if metrics or trace_path is not None:
             from repro import obs
             self._collector = obs.RoundCollector(
-                mode="service", lanes=num_lanes, slots=slots,
+                mode="service", lanes=self.num_lanes, slots=slots,
                 steps_per_round=steps_per_round, fused_steps=fused_steps,
-                backend=backend,
+                backend=backend, devices=self.n_devices,
                 trace=obs.TraceWriter(trace_path) if trace_path else None)
             self._collector.start(self.lanes)
+
+    def _build_round_fns(self) -> None:
+        """(Re)jit the round + stack-rebuild closures for the current mesh
+        — called at construction and after every :meth:`resize`."""
+        spec, backend = self.spec, self.backend
+        steps, fused = self.steps_per_round, self.fused_steps
+        mesh = self.mesh
+
+        def _rebuild(lanes, tables):
+            return ckpt.rebuild_stacks(spec.bind(tables, backend), lanes)
+
+        self._rebuild = jax.jit(_rebuild)
+        if mesh is None:
+            def _round(lanes, tables):
+                return make_round(spec.bind(tables, backend), steps,
+                                  fused_steps=fused)(lanes)
+
+            self._round = jax.jit(_round)
+            return
+        axes = tuple(mesh.axis_names)
+        max_ship = self.max_ship
+
+        def _round(lanes, tables):
+            return make_round(spec.bind(tables, backend), steps, axes,
+                              max_ship, fused)(lanes)
+
+        lane_specs = lane_partition_specs(
+            spec.bind(self._tables_jnp(), backend), axes)
+        table_specs = StackedTables(P(), P(), P())    # replicated per device
+        self._round = jax.jit(compat.shard_map(
+            _round, mesh=mesh, in_specs=(lane_specs, table_specs),
+            out_specs=(lane_specs, P()), check=False))
 
     def metrics(self):
         """``repro.obs.MetricsSnapshot`` of this service's registry, or
@@ -593,6 +632,7 @@ class SolverService:
         self._emit_incumbents()
         self._retire(open_np)
         self._expire()
+        self.maybe_autoscale()
         return open_np
 
     def drain(self, max_rounds: int = 100000) -> Dict[int, RequestResult]:
@@ -620,6 +660,67 @@ class SolverService:
         for r in requests or []:
             self.submit(r)
         return self.drain(max_rounds)
+
+    # -- elastic mesh membership --------------------------------------------
+
+    def resize(self, *, mesh: Optional[Mesh] = None,
+               num_lanes: Optional[int] = None) -> None:
+        """Re-layout the live pool onto a different mesh / per-device lane
+        count mid-run (the join-leave half of paper §VII, in memory).
+
+        Goes through the elastic W' ≠ W checkpoint/restore machinery
+        (``repro.core.checkpoint.repartition``): the first W' in-flight
+        tasks land on the new lanes, surplus parks in the instance-tagged
+        pending pool, per-instance incumbents and aggregate counters are
+        carried over exactly.  Tickets, results, queue and tables stay
+        live in place — outstanding :class:`Ticket` handles keep working.
+        The round closure is re-jitted for the new mesh (the one real cost
+        — which is why :class:`AutoscalePolicy` carries a cooldown).
+        """
+        per_dev = (self.lanes_per_device if num_lanes is None
+                   else int(num_lanes))
+        n_dev = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+        total = per_dev * n_dev
+        if total < 1:
+            raise ValueError(f"resize to {total} lanes")
+        old_dev, old_total = self.n_devices, self.num_lanes
+        problem = self.spec.bind(self._tables_jnp(), self.backend)
+        lanes_host = _gather_lanes(self.lanes)
+        new_lanes, surplus = ckpt.repartition(problem, lanes_host, total)
+        self.mesh = mesh
+        self.n_devices = n_dev
+        self.lanes_per_device = per_dev
+        self.num_lanes = total
+        self.lanes = new_lanes
+        self.pool.extend(surplus)
+        self._build_round_fns()
+        if self._collector is not None:
+            self._collector.resize(total, devices=n_dev,
+                                   round_no=self.rounds)
+        self._emit("resize", reason=f"devices {old_dev}->{n_dev}, "
+                                    f"lanes {old_total}->{total}")
+
+    def maybe_autoscale(self) -> bool:
+        """Ask the :class:`AutoscalePolicy` (when configured) whether to
+        change the device count; perform the :meth:`resize` if so.  Runs
+        once per round from :meth:`step_round` — the semi-centralized
+        scheduler layer's elasticity hook."""
+        if self.autoscale is None:
+            return False
+        target = self.autoscale.decide(
+            queue_depth=self.sched.queue_depth(), devices=self.n_devices,
+            now_round=self.rounds,
+            busy=any(r >= 0 for r in self.slot_rid) or bool(self.pool))
+        if target is None or target == self.n_devices:
+            return False
+        devices = jax.devices()
+        if target > len(devices):
+            return False
+        mesh = (jax.make_mesh((target,), ("workers",),
+                              devices=devices[:target])
+                if target > 1 else None)
+        self.resize(mesh=mesh)
+        return True
 
     # -- elastic checkpoint -------------------------------------------------
 
@@ -703,9 +804,13 @@ class SolverService:
     def restore(cls, path: str, *, num_lanes: int,
                 steps_per_round: int = 64, backend: str = "jnp",
                 scheduler: Optional[Union[str, SchedulingPolicy]] = None,
+                mesh: Optional[Mesh] = None, max_ship: int = 16,
                 trace_path: Optional[str] = None, metrics: bool = False
                 ) -> "SolverService":
-        """Rebuild the service onto ``num_lanes`` lanes (elastic W' ≠ W).
+        """Rebuild the service onto ``num_lanes`` lanes per device
+        (elastic W' ≠ W; ``mesh`` — like the lane count and backend — is
+        an execution choice, so a service saved single-device restores
+        sharded and vice versa).
 
         Surplus in-flight tasks wait in the pending pool and are installed
         as lanes free up.  Queued (never-admitted) requests ARE persisted
@@ -728,13 +833,14 @@ class SolverService:
                           steps_per_round=steps_per_round, backend=backend,
                           scheduler=(meta["scheduler"] if scheduler is None
                                      else scheduler),
+                          mesh=mesh, max_ship=max_ship,
                           trace_path=trace_path, metrics=metrics)
         svc.tables = StackedTables(
             adj=extra["adj"].copy(), fullm=extra["fullm"].copy(),
             family=extra["family"].copy())
         svc._touch_tables()
         problem = svc.spec.bind(svc._tables_jnp(), backend)
-        svc.lanes, svc.pool = ckpt.restore(path, problem, num_lanes)
+        svc.lanes, svc.pool = ckpt.restore(path, problem, svc.num_lanes)
         for i in range(extra["pool_idx"].shape[0]):
             d, b, inst = (int(x) for x in extra["pool_meta"][i])
             svc.pool.append(ckpt.PendingTask(extra["pool_idx"][i].copy(),

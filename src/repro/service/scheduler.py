@@ -26,6 +26,7 @@ engine over lanes and slots, and ALL policy lives here:
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from typing import Dict, List, NamedTuple, Optional, Protocol, Tuple
 
@@ -34,6 +35,7 @@ from repro.service.ticket import (TERMINAL, SolveRequest, Ticket,
                                   TicketStatus)
 
 __all__ = [
+    "AutoscalePolicy",
     "Fifo",
     "PriorityFifo",
     "QueueItem",
@@ -172,6 +174,48 @@ def make_policy(name: str) -> SchedulingPolicy:
         raise ValueError(
             f"unknown scheduling policy {name!r} (known: "
             f"{', '.join(sorted(SCHEDULERS))})") from None
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    """Semi-centralized elasticity decisions, keyed on
+    :meth:`Scheduler.queue_depth` (DESIGN.md §9).
+
+    The sharded service driver asks :meth:`decide` once per round and
+    performs the mechanics itself (``SolverService.resize`` — an in-memory
+    elastic W' ≠ W checkpoint/restore cycle onto a different device
+    count).  Like every policy in this module, the decision layer never
+    touches device state.
+
+    * grow when the admission queue has backed up to ``grow_at`` or more;
+    * shrink when it has drained to ``shrink_below`` or fewer AND the run
+      is not using its open capacity (the driver passes ``busy=False``
+      when live slots leave lanes idle);
+    * never outside [min_devices, max_devices], never within
+      ``cooldown_rounds`` of the previous change (resizing re-jits the
+      round, so flapping is the failure mode this guards).
+    """
+
+    grow_at: int = 2
+    shrink_below: int = 0
+    min_devices: int = 1
+    max_devices: int = 1
+    cooldown_rounds: int = 8
+    _last_change: int = dataclasses.field(default=-(10 ** 9), repr=False)
+
+    def decide(self, *, queue_depth: int, devices: int, now_round: int,
+               busy: bool = True) -> Optional[int]:
+        """Target device count, or None to stay put."""
+        if now_round - self._last_change < self.cooldown_rounds:
+            return None
+        if queue_depth >= self.grow_at and devices < self.max_devices:
+            self._last_change = now_round
+            return min(self.max_devices, devices * 2)
+        if (queue_depth <= self.shrink_below and not busy
+                and devices > self.min_devices):
+            self._last_change = now_round
+            return max(self.min_devices, devices // 2)
+        return None
 
 
 class Scheduler:

@@ -73,7 +73,8 @@ class SolverConfig:
       lanes: engine lanes per device (total lanes = lanes × #devices).
       steps_per_round: engine steps between steal/collective phases (R).
       max_rounds: hard round budget before the drive aborts.
-      mesh: device mesh for the distributed round, or None (single device).
+      mesh: device mesh, or None (single device) — honored by both
+        :meth:`Solver.solve` and the sharded service (:meth:`Solver.serve`).
       max_ship: cross-device tasks shipped per device per round.
       bootstrap_rounds / bootstrap_steps: short ramp-up rounds that flood
         initial tasks (the paper's GETPARENT topology analogue).
@@ -101,6 +102,12 @@ class SolverConfig:
         ``SolverService.metrics()`` and attached to "round"/"done"
         :class:`ProgressEvent`\\ s.  Same host-side-only guarantee as
         ``trace_path``.
+      autoscale: an ``repro.service.scheduler.AutoscalePolicy`` (or None)
+        — service mode only.  Each round the driver asks the policy for a
+        target device count keyed on the admission queue depth and
+        resizes the mesh elastically (``SolverService.resize``, an
+        in-memory W' ≠ W checkpoint/restore).  Ignored by
+        :meth:`Solver.solve`, whose device count is fixed by ``mesh``.
     """
 
     lanes: int = 32
@@ -118,6 +125,7 @@ class SolverConfig:
     fused_steps: int = 1
     trace_path: Optional[str] = None
     metrics: bool = False
+    autoscale: Optional[Any] = None
 
     def __post_init__(self):
         if self.lanes < 1:
@@ -156,7 +164,7 @@ class SolverConfig:
 #: fails at the emitter instead of flowing silently past consumers.
 EVENT_KINDS = frozenset({
     "round", "checkpoint", "admit", "incumbent", "retire", "reject",
-    "cancel", "expire", "done",
+    "cancel", "expire", "resize", "done",
 })
 
 
@@ -179,6 +187,8 @@ class ProgressEvent:
                      incumbent if it ever ran);
       "expire"     — request ``rid`` hit its deadline or node budget and
                      was evicted with ``best`` as its anytime result;
+      "resize"     — the service re-laid its lane pool onto a different
+                     mesh / lane count (``reason`` describes the change);
       "done"       — the solve drained (``best`` is the global optimum).
 
     ``metrics`` carries a ``repro.obs.MetricsSnapshot`` on "round"/"done"
@@ -449,10 +459,17 @@ class Solver:
         validated at ``submit()`` time (typed
         :class:`repro.service.AdmissionError`, after a ``reject`` event).
 
+        With ``mesh`` set the service runs SHARDED (DESIGN.md §9): the
+        lane pool is partitioned over the mesh (``lanes`` per device), the
+        stacked tables and per-instance incumbents are replicated, rounds
+        run under shard_map with instance-scoped cross-device stealing,
+        and per-instance open-work/node accounting reduces across the mesh
+        each round.  Admission stays a host-side table write either way.
+
         The service driver has its own checkpoint surface
-        (``SolverService.save`` / ``.restore``) and runs single-device, so
-        a config carrying ``mesh``, ``checkpoint_every`` or ``resume_from``
-        is rejected here rather than silently ignored.
+        (``SolverService.save`` / ``.restore``), so a config carrying
+        ``checkpoint_every`` or ``resume_from`` is rejected here rather
+        than silently ignored.
         """
         from repro.service.batch_problem import STACKED_BACKENDS
         from repro.service.driver import SolverService
@@ -468,7 +485,6 @@ class Solver:
                 f"policies: {', '.join(sorted(SCHEDULERS))})")
         unsupported = [
             name for name, is_set in (
-                ("mesh", self.config.mesh is not None),
                 ("checkpoint_every", bool(self.config.checkpoint_every)),
                 ("resume_from", self.config.resume_from is not None),
             ) if is_set]

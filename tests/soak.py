@@ -1,0 +1,308 @@
+"""Randomized differential soak harness for the sharded service (§9).
+
+One seeded random request trace is replayed on three legs:
+
+  serial    SERIAL-RB per instance (ground-truth optima and tree sizes;
+            computed while the trace is generated — rejection sampling
+            needs the tree sizes anyway);
+  1-device  the ticketed service on one device, with mid-flight
+            W' != W lane-pool resizes;
+  mesh      the service sharded over a forced host-device mesh
+            (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) with
+            mid-flight device-count resizes (even seeds) or the
+            queue-depth autoscaler growing the mesh from one device
+            (odd seeds).
+
+A trace mixes vc/ds instances, priorities, deadline and node-budget
+evictions, and queued/running cancellations.  Each request carries a
+*role* whose terminal status is deterministic BY CONSTRUCTION, so the
+legs must agree exactly:
+
+  done            small instance, no limits -> DONE, optimum == serial;
+  budget          node_budget=1, big tree   -> EXPIRED at the end of its
+                  first running round (>= 1 node used, cannot finish);
+  deadline        deadline_rounds=1, big tree -> EXPIRED at the first
+                  step after submission, queued or running;
+  cancel_queued   cancelled right after submit -> CANCELLED;
+  cancel_running  cancelled at first observed RUNNING -> CANCELLED.
+
+The determinism hinges on one engine fact: an instance's admission
+round expands ONLY its seed lane (idle retargeted lanes hold no stack
+until the steal phase at the round's end), at most ``steps_per_round``
+nodes — so "big tree" instances (rejection-sampled to ``MIN_TREE``
+serial nodes) cannot finish before their eviction/cancellation lands,
+on any lane count or mesh shape.
+
+Per leg the harness also asserts ticket conservation (every submitted
+rid reaches exactly one terminal event, nothing rejected, nothing
+double-retired) and runs ``tools/trace_report.py``'s ledger checks over
+the service trace (per-lane == per-instance == total node sums, which
+the resize carried-counter convention must preserve).
+
+CLI (the CI soak-smoke job; must start a FRESH process so the forced
+device count lands before jax initializes):
+
+  python tests/soak.py --seeds 0,1 --devices 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import random
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+STEPS = 8            # steps_per_round for both service legs
+SLOTS = 3            # instance slots for both service legs
+LANES_1DEV = 8       # 1-device leg lane pool
+LANES_PER_DEV = 4    # mesh leg lanes PER DEVICE
+MAX_N = 24           # constant padding -> jit cache shared across seeds
+MIN_TREE = 4 * STEPS  # limit-role instances must exceed this serially
+N_REQUESTS = 10
+
+ROLES = ("done", "budget", "deadline", "cancel_queued", "cancel_running")
+_ROLE_WEIGHTS = (5, 1, 1, 1, 2)
+#: role -> the terminal RequestResult/TicketStatus every leg must reach.
+EXPECTED = {"done": "done", "budget": "expired", "deadline": "expired",
+            "cancel_queued": "cancelled", "cancel_running": "cancelled"}
+
+
+def _sample_instance(rng: random.Random, big: bool) -> dict:
+    """One random graph instance; ``big`` rejection-samples until the
+    serial tree is deep enough to outlive a single seed-lane round."""
+    from repro import registry
+    from repro.core.serial import serial_rb
+    from repro.problems import gnp_graph
+
+    while True:
+        family = rng.choice(("vc", "ds"))
+        if big:
+            n, p = rng.randrange(18, 23), rng.choice((35, 45))
+        else:
+            n, p = rng.randrange(10, 15), rng.choice((25, 30, 35))
+        gseed = rng.randrange(10 ** 6)
+        graph = gnp_graph(n, p / 100.0, seed=gseed)
+        best, nodes, _ = serial_rb(registry.problem(family, graph).oracle())
+        if not big or nodes >= MIN_TREE:
+            return {"family": family, "n": n, "p": p, "gseed": gseed,
+                    "serial_best": int(best), "serial_nodes": int(nodes)}
+
+
+def make_trace(seed: int, n_requests: int = N_REQUESTS) -> dict:
+    """Seeded random trace: requests with roles + an op script of submit
+    waves, stepping, and two resize points.  The first four rids cover
+    one of each event class so EVERY trace exercises cancels and (via
+    the op script) elastic resharding."""
+    rng = random.Random(seed)
+    forced = ["done", "cancel_queued", "cancel_running",
+              rng.choice(("budget", "deadline"))]
+    reqs = []
+    for rid in range(n_requests):
+        role = (forced[rid] if rid < len(forced)
+                else rng.choices(ROLES, weights=_ROLE_WEIGHTS)[0])
+        req = dict(_sample_instance(rng, big=role != "done"),
+                   rid=rid, role=role, priority=rng.randrange(4))
+        if role == "budget":
+            req["node_budget"] = 1
+        elif role == "deadline":
+            req["deadline_rounds"] = 1
+        reqs.append(req)
+
+    ops, i, resizes = [], 0, 0
+    while i < len(reqs):
+        wave = min(len(reqs) - i, rng.randrange(2, 6))
+        for req in reqs[i:i + wave]:
+            ops.append(("submit", req))
+        i += wave
+        ops.append(("step", rng.randrange(1, 4)))
+        if resizes < 2 and rng.random() < 0.5:
+            ops.append(("resize", resizes))
+            resizes += 1
+    while resizes < 2:           # always two elastic events per trace
+        ops.append(("resize", resizes))
+        ops.append(("step", 1))
+        resizes += 1
+    return {"seed": seed, "reqs": reqs, "ops": ops}
+
+
+def run_service_leg(trace: dict, *, devices: int, lanes: int,
+                    resize_plan, trace_path: str,
+                    autoscale_to: int = 0) -> tuple:
+    """Replay ``trace`` on one service configuration.
+
+    ``resize_plan`` maps the trace's resize ops to (devices, per-device
+    lanes-or-None) targets; with ``autoscale_to`` set the plan is
+    ignored and the queue-depth :class:`AutoscalePolicy` drives the mesh
+    instead.  Returns ({rid: {"status", "optimum"}}, info-dict) after
+    asserting ticket conservation.
+    """
+    import jax
+
+    from repro.problems import gnp_graph
+    from repro.service import SolveRequest
+    from repro.service.scheduler import AutoscalePolicy
+    from repro.service.ticket import TERMINAL, TicketStatus
+    from repro.solver import Solver, SolverConfig
+
+    def make_mesh(n_dev):
+        return (jax.make_mesh((n_dev,), ("workers",),
+                              devices=jax.devices()[:n_dev])
+                if n_dev > 1 else None)
+
+    cfg = SolverConfig(
+        lanes=lanes, steps_per_round=STEPS, mesh=make_mesh(devices),
+        autoscale=(AutoscalePolicy(grow_at=1, max_devices=autoscale_to,
+                                   cooldown_rounds=1)
+                   if autoscale_to > 1 else None),
+        trace_path=trace_path)
+    svc = Solver(cfg).serve(max_n=MAX_N, slots=SLOTS)
+    events = []
+    svc.on_event = events.append
+    tickets, watch = {}, set()    # watch: cancel_running rids still live
+
+    def poll():
+        for rid in sorted(watch):
+            ticket = tickets[rid]
+            if ticket.status is TicketStatus.RUNNING:
+                ticket.cancel()
+                watch.discard(rid)
+            elif ticket.status in TERMINAL:
+                watch.discard(rid)
+
+    def step():
+        if svc._has_work():
+            svc.step_round()
+            poll()
+
+    for op in trace["ops"]:
+        if op[0] == "submit":
+            req = op[1]
+            tickets[req["rid"]] = svc.submit(SolveRequest(
+                rid=req["rid"], family=req["family"],
+                graph=gnp_graph(req["n"], req["p"] / 100.0,
+                                seed=req["gseed"]),
+                priority=req["priority"],
+                deadline_rounds=req.get("deadline_rounds"),
+                node_budget=req.get("node_budget")))
+            if req["role"] == "cancel_queued":
+                assert tickets[req["rid"]].cancel()
+            elif req["role"] == "cancel_running":
+                watch.add(req["rid"])
+        elif op[0] == "step":
+            for _ in range(op[1]):
+                step()
+        elif op[0] == "resize" and not autoscale_to:
+            n_dev, per_dev = resize_plan[op[1]]
+            svc.resize(mesh=make_mesh(n_dev), num_lanes=per_dev)
+    while svc._has_work():
+        step()
+    svc.finalize_trace()
+
+    # Ticket conservation: exactly one terminal event per rid, nothing
+    # rejected, every ticket terminal.
+    terminal = {}
+    for ev in events:
+        assert ev.kind != "reject", f"unexpected reject: {ev}"
+        if ev.kind in ("retire", "expire", "cancel"):
+            terminal.setdefault(ev.rid, []).append(ev.kind)
+    for req in trace["reqs"]:
+        kinds = terminal.get(req["rid"], [])
+        assert len(kinds) == 1, (
+            f"rid {req['rid']} saw terminal events {kinds}, want exactly 1")
+        assert tickets[req["rid"]].status in TERMINAL, (
+            f"rid {req['rid']} never resolved: {tickets[req['rid']].status}")
+    assert set(terminal) == {req["rid"] for req in trace["reqs"]}
+
+    out = {}
+    for req in trace["reqs"]:
+        ticket = tickets[req["rid"]]
+        result = svc.results.get(req["rid"])
+        out[req["rid"]] = {
+            "status": ticket.status.value,
+            "optimum": (int(result.optimum)
+                        if result is not None
+                        and ticket.status is TicketStatus.DONE else None)}
+    import numpy as np
+    info = {"rounds": svc.rounds, "devices_final": svc.n_devices,
+            "resizes": sum(1 for ev in events if ev.kind == "resize"),
+            "cross_steals": int(np.asarray(svc.lanes.t_c).sum())}
+    return out, info
+
+
+def check_ledger(trace_path: str) -> dict:
+    """tools/trace_report.py's full consistency pass (raises TraceError
+    on any per-lane / per-instance / total node-count mismatch)."""
+    sys.path.insert(0, str(ROOT / "tools"))
+    import trace_report
+
+    from repro.obs.trace import read_trace
+    return trace_report.analyze(read_trace(trace_path))
+
+
+def run_soak(seed: int, devices: int = 4) -> dict:
+    """The three-leg differential run for one seed; raises on any
+    disagreement, returns a summary dict."""
+    trace = make_trace(seed)
+    with tempfile.TemporaryDirectory() as td:
+        one_path = os.path.join(td, "one.jsonl")
+        mesh_path = os.path.join(td, "mesh.jsonl")
+        one, one_info = run_service_leg(
+            trace, devices=1, lanes=LANES_1DEV,
+            resize_plan=[(1, LANES_1DEV + 4), (1, LANES_1DEV)],
+            trace_path=one_path)
+        autoscale_to = devices if seed % 2 else 0
+        mesh, mesh_info = run_service_leg(
+            trace, devices=1 if autoscale_to else devices,
+            lanes=LANES_PER_DEV,
+            resize_plan=[(max(2, devices // 2), None), (devices, None)],
+            trace_path=mesh_path, autoscale_to=autoscale_to)
+        assert one_info["resizes"] == 2, one_info
+        if not autoscale_to:
+            assert mesh_info["resizes"] == 2, mesh_info
+        ledgers = {"one": check_ledger(one_path),
+                   "mesh": check_ledger(mesh_path)}
+
+    serial = {req["rid"]: req for req in trace["reqs"]}
+    for rid, req in serial.items():
+        want = EXPECTED[req["role"]]
+        for leg, got in (("1dev", one), ("mesh", mesh)):
+            assert got[rid]["status"] == want, (
+                f"seed {seed} rid {rid} role {req['role']}: {leg} leg "
+                f"ended {got[rid]['status']!r}, want {want!r}")
+            if want == "done":
+                assert got[rid]["optimum"] == req["serial_best"], (
+                    f"seed {seed} rid {rid}: {leg} optimum "
+                    f"{got[rid]['optimum']} != serial {req['serial_best']}")
+    assert one == mesh, f"seed {seed}: legs disagree\n1dev={one}\nmesh={mesh}"
+
+    return {"seed": seed, "requests": len(serial),
+            "statuses": {rid: one[rid]["status"] for rid in sorted(one)},
+            "one": one_info, "mesh": mesh_info,
+            "nodes": {leg: ledgers[leg]["nodes"] for leg in ledgers}}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seeds", default="0",
+                    help="comma-separated trace seeds (default: 0)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count for the mesh leg")
+    args = ap.parse_args(argv)
+    # Must land before jax initializes — hence a fresh process per run.
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}")
+    sys.path.insert(0, str(ROOT / "src"))
+    seeds = [int(s) for s in args.seeds.split(",") if s.strip()]
+    for seed in seeds:
+        summary = run_soak(seed, devices=args.devices)
+        print("RESULT " + json.dumps(summary))
+    print(f"SOAK_OK seeds={seeds}")
+
+
+if __name__ == "__main__":
+    main()

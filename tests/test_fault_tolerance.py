@@ -144,3 +144,93 @@ def test_batched_server_matches_reference():
         ref.append(int(tok[0, 0]))
         pos += 1
     assert reqs[0].out == ref
+
+
+_MESH_SERVICE_KILL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, random
+import jax
+import numpy as np
+from repro import registry
+from repro.problems import gnp_graph
+from repro.service import SolveRequest, SolverService
+from repro.solver import Solver, SolverConfig
+
+SEED = int(os.environ.get("MESH_KILL_SEED", "7"))
+rng = random.Random(SEED)
+
+
+def mesh_of(d):
+    return (jax.make_mesh((d,), ("workers",), devices=jax.devices()[:d])
+            if d > 1 else None)
+
+
+graphs = [(rng.choice(("vc", "ds")), gnp_graph(rng.randrange(14, 19),
+                                               rng.choice((30, 40)) / 100.0,
+                                               seed=rng.randrange(10 ** 6)))
+          for _ in range(6)]
+want = {i: Solver().oracle(registry.problem(fam, g)).best
+        for i, (fam, g) in enumerate(graphs)}
+
+# Service A: 4 devices x 4 lanes; kill it at a random early round.
+svc = Solver(SolverConfig(lanes=4, steps_per_round=4, mesh=mesh_of(4))
+             ).serve(max_n=20, slots=2)
+for i, (fam, g) in enumerate(graphs):
+    svc.submit(SolveRequest(rid=i, graph=g, family=fam))
+# Random kill round, but only once stealing has spread the work past
+# the restore capacity (2 lanes) — the W' != W surplus precondition.
+extra = rng.randrange(0, 3)
+kill_at = 0
+while svc._has_work():
+    svc.step_round()
+    kill_at += 1
+    live = int(np.asarray(svc.lanes.active).sum())
+    if live > 2 and extra == 0:
+        break
+    if live > 2:
+        extra -= 1
+    assert kill_at < 80, "work never spread past 2 lanes"
+svc.save("/tmp/mesh_service_kill.ckpt")
+live = int(np.asarray(svc.lanes.active).sum())
+del svc        # the "kill": nothing of service A survives but the file
+
+# Service B: a DIFFERENT, smaller mesh (W' != W) — more checkpointed
+# live tasks than the 2x1=2 new lanes, so the pending pool MUST be
+# non-empty right after restore while queued requests also survive.
+svc2 = SolverService.restore("/tmp/mesh_service_kill.ckpt", num_lanes=1,
+                             steps_per_round=4, mesh=mesh_of(2))
+pool_after = len(svc2.pool)
+queue_after = len(svc2.queue)
+res = svc2.drain()
+got = {i: int(res[i].optimum) for i in want}
+print("RESULT " + json.dumps({
+    "kill_at": kill_at, "live_at_kill": live, "pool_after": pool_after,
+    "queue_after": queue_after, "devices": svc2.n_devices,
+    "ok": got == want, "got": got, "want": want}))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_service_kill_restore_elastic():
+    """Kill a 4-device sharded service at a random round mid-run and
+    restore it onto a 2-device mesh with fewer total lanes (W' != W):
+    the surplus in-flight subtrees must park in the pending pool (it is
+    asserted NON-empty — the elastic path actually engaged) and the
+    drained optima must still match the serial oracle for every tenant.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    env["MESH_KILL_SEED"] = "7"
+    proc = subprocess.run([sys.executable, "-c", _MESH_SERVICE_KILL],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    import json
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["ok"], res
+    assert res["pool_after"] > 0, res      # W' != W really shed work
+    assert res["devices"] == 2, res

@@ -1,0 +1,155 @@
+"""Property tests for the scheduler policy layer (DESIGN.md §7).
+
+Three invariant families over :mod:`repro.service.scheduler`, randomized
+via hypothesis (or the deterministic ``_hypothesis_stub`` replay shim):
+
+  * pop order — every policy drains exactly in its documented key order
+    (priority desc / arrival / registered instance size, all ties FIFO);
+  * remove() never corrupts pending() — under arbitrary interleavings of
+    push/remove/pop (including the lazy-removal heap compaction path),
+    the policy tracks a naive sorted-list reference model exactly;
+  * overdue() is monotone in the round — with ticket state frozen, a
+    request overdue at round r stays overdue at every r' > r, so
+    eviction decisions can never flap.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # shim: see _hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro import registry
+from repro.problems import gnp_graph
+from repro.service import SolveRequest
+from repro.service.scheduler import (Fifo, PriorityFifo, QueueItem,
+                                     Scheduler, ShortestJobFirst,
+                                     make_policy)
+from repro.service.ticket import Ticket, TicketStatus
+
+#: Shared tiny instances; SJF keys on the registered size, so a spread of
+#: graph orders exercises non-trivial orderings.
+_GRAPHS = {n: gnp_graph(n, 0.3, seed=n) for n in range(4, 13)}
+
+
+def _req(rid, priority=0, n=6):
+    return SolveRequest(rid=rid, graph=_GRAPHS[n], family="vc",
+                        priority=priority)
+
+
+def _drain(policy):
+    out = []
+    while True:
+        item = policy.pop()
+        if item is None:
+            return out
+        out.append(item)
+
+
+# -- pop order --------------------------------------------------------------
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=30))
+def test_priority_pop_order(prios):
+    policy = PriorityFifo()
+    for seq, priority in enumerate(prios):
+        policy.push(QueueItem(seq, _req(seq, priority=priority)))
+    got = [(item.request.priority, item.seq) for item in _drain(policy)]
+    assert got == sorted(got, key=lambda t: (-t[0], t[1]))
+    assert len(got) == len(prios) and policy.pop() is None
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=30))
+def test_fifo_pop_is_arrival_order(prios):
+    policy = Fifo()
+    for seq, priority in enumerate(prios):
+        policy.push(QueueItem(seq, _req(seq, priority=priority)))
+    # priorities are carried but must be IGNORED: pure arrival order.
+    assert [item.seq for item in _drain(policy)] == list(range(len(prios)))
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.integers(4, 12), min_size=0, max_size=30))
+def test_sjf_pop_is_size_order(sizes):
+    policy = ShortestJobFirst()
+    for seq, n in enumerate(sizes):
+        policy.push(QueueItem(seq, _req(seq, n=n)))
+    got = [(registry.instance_size("vc", item.request.graph), item.seq)
+           for item in _drain(policy)]
+    assert got == sorted(got)
+
+
+# -- remove()/pending() integrity -------------------------------------------
+
+@settings(deadline=None, max_examples=60)
+@given(st.sampled_from(["fifo", "priority", "sjf"]),
+       st.lists(st.integers(0, 299), min_size=0, max_size=60))
+def test_remove_never_corrupts_pending(name, codes):
+    """Random push/remove/pop interleavings against a sorted-list model:
+    pending() snapshots, pop results and len() must match at every step
+    (the lazy-removal heap plus its compaction path are the code under
+    test — the PR-1 style bug class here is a stale heap entry surviving
+    a remove)."""
+    policy = make_policy(name)
+    model = {}          # rid -> (key, seq)
+    next_rid = [0]
+
+    def key_of(request, seq):
+        return policy.key(request) + (seq,)
+
+    def model_order():
+        return tuple(sorted(model, key=model.get))
+
+    for code in codes:
+        op = code % 3
+        if op == 0 or not model:            # push a fresh request
+            rid = next_rid[0]
+            next_rid[0] += 1
+            request = _req(rid, priority=code % 5, n=4 + code % 9)
+            policy.push(QueueItem(rid, request))
+            model[rid] = key_of(request, rid)
+        elif op == 1:                       # remove an arbitrary live rid
+            rid = sorted(model)[code % len(model)]
+            assert policy.remove(rid) is True
+            del model[rid]
+            assert policy.remove(rid) is False, "double remove must be False"
+        else:                               # pop: must be the model's head
+            item = policy.pop()
+            head = model_order()[0]
+            assert item is not None and item.request.rid == head
+            del model[head]
+        assert len(policy) == len(model)
+        assert tuple(item.request.rid
+                     for item in policy.pending()) == model_order()
+    # drain agrees with the model to the end
+    assert [item.request.rid for item in _drain(policy)] == list(model_order())
+
+
+# -- overdue() monotonicity -------------------------------------------------
+
+@settings(deadline=None, max_examples=60)
+@given(st.lists(st.integers(0, 999), min_size=0, max_size=25))
+def test_overdue_is_monotone_in_round(codes):
+    """With ticket state frozen, overdue(r) ⊆ overdue(r') for r <= r' —
+    both the queued and the running eviction sets only ever grow."""
+    sched = Scheduler(PriorityFifo())
+    for rid, code in enumerate(codes):
+        deadline = (code % 40) if code % 3 else None
+        budget = (1 + code % 7) if code % 5 else None
+        ticket = Ticket(rid=rid, priority=0, deadline_round=deadline,
+                        node_budget=budget, submitted_round=0,
+                        _service=None)
+        ticket.status = (TicketStatus.QUEUED if code % 2
+                         else TicketStatus.RUNNING)
+        ticket.nodes_used = code % 9
+        sched.adopt(ticket)
+    prev = set()
+    for now_round in range(0, 45, 3):
+        queued, running = sched.overdue(now_round)
+        assert set(queued).isdisjoint(running)
+        current = set(queued) | set(running)
+        assert prev <= current, (
+            f"overdue set shrank at round {now_round}: {prev - current}")
+        prev = current

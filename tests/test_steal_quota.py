@@ -13,6 +13,12 @@ that version.
 
 Runs in a subprocess with 8 host devices (same pattern as
 test_distributed_solve: jax locks the device count at first init).
+
+The claim step itself (``repro.core.steal.claim_tasks``) is additionally
+property-tested IN PROCESS at the bottom of this file: random
+(inst, grank) claim matrices — any thief scattering, any instance
+assignment, junk values on non-thief lanes — must produce an
+instance-scoped bijection from matched thieves onto valid task rows.
 """
 
 import json
@@ -201,3 +207,82 @@ def test_greedy_prefix_quota_across_devices(quota_result):
 
 def test_no_demand_extracts_nothing(quota_result):
     assert quota_result["no_demand"] == {"delegated": 0, "installed": 0}
+
+
+# -- claim_tasks property test (in process; pure array math) ----------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # shim: see _hypothesis_stub
+    from _hypothesis_stub import given, settings, strategies as st
+
+_W, _ROWS, _K = 12, 16, 3                 # lanes, payload rows, instances
+
+
+@settings(deadline=None, max_examples=80)
+@given(st.lists(st.integers(0, 10 ** 6), min_size=8, max_size=8),
+       st.integers(0, 10 ** 6))
+def test_claim_tasks_is_instance_scoped_bijection(codes, salt):
+    """For ANY thief/row scattering with (inst, grank) unique among
+    thieves and among valid rows — the quota construction's guarantee —
+    ``claim_tasks`` claims exactly the thieves whose pair has a valid
+    row, each row goes to at most one thief, and no claim ever crosses
+    an instance boundary.  Non-thief lanes carry junk (inst, grank)
+    values on purpose: uniqueness is only promised among thieves."""
+    import numpy as np
+
+    from repro.core.steal import claim_tasks
+
+    rng = __import__("random").Random((tuple(codes), salt).__hash__())
+    # A shared pool of unique (inst, grank) pairs, split three ways:
+    # thief-only, row-only, and matched (present on both sides).
+    pool = [(i % _K, g) for g in range(8) for i in range(_K)]
+    rng.shuffle(pool)
+    n_thief = rng.randint(0, _W)
+    thief_pairs = pool[:n_thief]
+    n_matched = rng.randint(0, n_thief)
+    extra_rows = rng.randint(0, _ROWS - n_matched)
+    row_pairs = thief_pairs[:n_matched] + pool[n_thief:n_thief + extra_rows]
+    rng.shuffle(row_pairs)
+
+    thieves = np.zeros((_W,), bool)
+    inst = np.array([rng.randint(0, _K - 1) for _ in range(_W)], np.int32)
+    grank = np.array([rng.randint(0, 7) for _ in range(_W)], np.int32)
+    lanes = list(range(_W))
+    rng.shuffle(lanes)
+    for lane, (i, g) in zip(lanes, thief_pairs):
+        thieves[lane], inst[lane], grank[lane] = True, i, g
+
+    w_valid = np.zeros((_ROWS,), bool)
+    w_inst = np.array([rng.randint(0, _K - 1) for _ in range(_ROWS)],
+                      np.int32)
+    w_grank = np.array([rng.randint(0, 7) for _ in range(_ROWS)], np.int32)
+    rows = list(range(_ROWS))
+    rng.shuffle(rows)
+    for row, (i, g) in zip(rows, row_pairs):
+        w_valid[row], w_inst[row], w_grank[row] = True, i, g
+
+    src, claim = (np.asarray(a) for a in claim_tasks(
+        thieves, inst, grank, w_inst, w_grank, w_valid))
+
+    row_of = {(int(w_inst[r]), int(w_grank[r])): r
+              for r in range(_ROWS) if w_valid[r]}
+    for lane in range(_W):
+        should = thieves[lane] and (int(inst[lane]),
+                                    int(grank[lane])) in row_of
+        assert bool(claim[lane]) == should, f"lane {lane}"
+        if should:
+            r = int(src[lane])
+            assert w_valid[r]
+            # never cross-instance, never a rank mismatch
+            assert int(w_inst[r]) == int(inst[lane])
+            assert int(w_grank[r]) == int(grank[lane])
+    claimed_rows = [int(src[lane]) for lane in range(_W) if claim[lane]]
+    assert len(claimed_rows) == len(set(claimed_rows)), "row double-claimed"
+    # surjective onto the matched rows: every valid row with a thief
+    # counterpart is consumed (a dropped row is a lost subtree).
+    matched = {row_of[p] for p in row_of
+               if any(thieves[lane] and (int(inst[lane]),
+                                         int(grank[lane])) == p
+                      for lane in range(_W))}
+    assert set(claimed_rows) == matched
