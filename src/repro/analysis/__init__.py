@@ -1,0 +1,47 @@
+"""repro-lint: repo-aware static analysis for the framework (DESIGN.md §10).
+
+An AST-based lint pass that enforces, at CI time, the invariants the
+runtime can only catch on hardware (or not at all):
+
+  * ``trace-safety``     — no host↔device syncs inside the jitted round
+                           loop (``.item()``, ``int(traced)``,
+                           ``np.asarray(traced)``, Python ``if``/``while``
+                           on traced operands);
+  * ``pallas-contract``  — kernels obey the DESIGN §5.2 block/VMEM
+                           contract and every public kernel has a
+                           ``ref.py`` oracle plus a parity test;
+  * ``telemetry-schema`` — ``emit()``/trace ``write()`` call sites are
+                           statically valid against ``EVENT_KINDS`` /
+                           ``TRACE_KINDS``;
+  * ``api-hygiene``      — public exports are snapshotted in
+                           ``tools/api_surface.txt`` and deprecation
+                           shims carry the exactly-once warning pattern.
+
+Front door: :func:`lint_paths` (used by ``tools/lint.py`` and the test
+suite).  The package is stdlib-only — it never imports jax — so the CI
+``lint`` job needs no dependency installs.
+"""
+
+from repro.analysis.core import (
+    Finding,
+    LintResult,
+    RepoContext,
+    Rule,
+    all_rules,
+    lint_paths,
+)
+
+# Importing the rule modules registers their rules with the registry.
+from repro.analysis import api_hygiene  # noqa: F401  (registration)
+from repro.analysis import pallas_contract  # noqa: F401  (registration)
+from repro.analysis import telemetry  # noqa: F401  (registration)
+from repro.analysis import trace_safety  # noqa: F401  (registration)
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "RepoContext",
+    "Rule",
+    "all_rules",
+    "lint_paths",
+]

@@ -63,7 +63,7 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return interpret
 
 
-def _validate_tile(tile, stages: int) -> None:
+def _validate_tile(tile: int, stages: int) -> None:
     """The ISSUE-6 tile contract: positive everywhere; power-of-two where
     the split-phase combine requires it (block args must ascend uniformly
     for the smallest-id tie-break arithmetic)."""

@@ -1,0 +1,16 @@
+"""Known-bad fixture for the api-hygiene rule: malformed deprecation
+shims (missing stacklevel; message the filters cannot pin)."""
+import warnings
+
+
+def old_entry(*args, **kwargs):
+    warnings.warn("old_entry is deprecated; use new_entry",
+                  DeprecationWarning)          # BAD: no stacklevel=2
+    return None
+
+
+def legacy_solve(*args, **kwargs):
+    warnings.warn("use solve_instead",          # BAD: doesn't say
+                  DeprecationWarning,           # 'deprecated'
+                  stacklevel=2)
+    return None

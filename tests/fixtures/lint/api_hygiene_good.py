@@ -1,0 +1,14 @@
+"""Known-good fixture for the api-hygiene rule: the exactly-once
+deprecation shim pattern (DeprecationWarning + stacklevel=2 + a
+message the pytest.ini error filters can pin)."""
+import warnings
+
+
+def old_entry(*args, **kwargs):
+    warnings.warn("old_entry is deprecated; use new_entry",
+                  DeprecationWarning, stacklevel=2)
+    return None
+
+
+def loud(msg):
+    warnings.warn(msg)            # not a deprecation: out of scope

@@ -1,0 +1,35 @@
+"""Known-bad fixture for the pallas-contract rule: unpadded grid
+divide, impure index_map, and an over-budget hard-coded tile."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import count_stats
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def doubled(x, *, tile: int = 8):
+    rows = x.shape[0]
+    grid = (rows // tile,)            # BAD: no _pad_rows before // tile
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, x.shape[1]),
+                               lambda t: (pick(t), 0))],   # BAD: call in
+        out_specs=pl.BlockSpec((tile, x.shape[1]),          # index_map
+                               lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def pick(t):
+    return t
+
+
+def over_budget(table, mask, valid):
+    # BAD: hard-coded tile with the split-phase layout blows the 4 MiB
+    # VMEM working-set budget at the documented bound shape.
+    return count_stats(table, mask, valid, tile=4096, stages=2)

@@ -1,0 +1,35 @@
+"""Known-good fixture for the pallas-contract rule: padded grid,
+pure index_map, autotuned tile."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import count_stats
+
+
+def _pad_rows(x, tile: int):
+    pad = (-x.shape[0]) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def doubled(x, *, tile: int = 8):
+    x = _pad_rows(x, tile)
+    grid = (x.shape[0] // tile,)          # padded first: exact tiling
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, x.shape[1]), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((tile, x.shape[1]), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def in_budget(table, mask, valid):
+    # tile=None defers to the autotuner, which owns the VMEM budget.
+    return count_stats(table, mask, valid, tile=None, stages=None)

@@ -1,0 +1,13 @@
+"""Suppression fixture: one properly-suppressed hazard (with reason)
+and one reasonless suppression (which is itself a finding)."""
+import jax
+
+
+def kernel(x):
+    # repro-lint: disable=trace-safety -- fixture: deliberate host sync under test
+    n = int(x)
+    m = x.item()  # repro-lint: disable=trace-safety
+    return n + m
+
+
+jitted = jax.jit(kernel)

@@ -1,0 +1,19 @@
+"""Known-bad fixture for the telemetry-schema rule: unknown event
+kind, unknown trace kind, missing required trace fields, unknown
+lifecycle kind."""
+from repro.solver import emit
+
+
+def report(cb, trace, collector):
+    emit(cb, "warp", round=1)                   # BAD: not in EVENT_KINDS
+    trace.write("bogus", round=1)               # BAD: not in TRACE_KINDS
+    trace.write("incumbent", round=1, inst=0)   # BAD: missing 'best'
+    collector.lifecycle("nope", round_no=1, rid=2)   # BAD: unknown kind
+
+
+class Emitter:
+    def _emit(self, kind, **kw):
+        pass
+
+    def poke(self):
+        self._emit("finished", rid=1)           # BAD: not in EVENT_KINDS

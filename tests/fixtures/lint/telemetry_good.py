@@ -1,0 +1,21 @@
+"""Known-good fixture for the telemetry-schema rule: valid kinds with
+all required fields (plus allowed extras), variable kinds skipped."""
+from repro.solver import emit
+
+
+def report(cb, trace, collector, kind):
+    emit(cb, "round", round=1, open_work=3)
+    emit(cb, "done", round=9, open_work=0)
+    trace.write("incumbent", round=1, inst=0, best=4, rid=7)
+    trace.write("summary", rounds=2, nodes=10, lane_nodes=[10],
+                inst_nodes=[10])
+    trace.write(kind, round=1, rid=2)        # variable kind: runtime's job
+    collector.lifecycle("admit", round_no=1, rid=2)
+
+
+class Emitter:
+    def _emit(self, kind, **kw):
+        pass
+
+    def poke(self):
+        self._emit("retire", rid=1, best=3)

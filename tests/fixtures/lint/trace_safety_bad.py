@@ -1,0 +1,45 @@
+"""Known-bad fixture: every trace-safety hazard class, plus the
+round-path placement readback.  tests/test_lint.py asserts the
+trace-safety rule fires on each marked line."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel(x, y):
+    if x > 0:                      # BAD: Python `if` on a traced operand
+        y = y + 1
+    while y > 0:                   # BAD: Python `while` on a traced operand
+        y = y - 1
+    n = int(x)                     # BAD: int() of a traced value
+    h = x.item()                   # BAD: .item() host sync
+    a = np.asarray(y)              # BAD: np.asarray of a device array
+    return n + h + a
+
+
+jitted = jax.jit(kernel)
+
+
+def make_loop(steps):
+    def loop(x):
+        z = jnp.sum(x)
+        flag = bool(z)             # BAD: bool() of a traced value (builder)
+        return z if flag else x
+    return loop
+
+
+run = jax.jit(make_loop(4))
+
+
+class BadDriver:
+    def __init__(self, lanes):
+        self.lanes = lanes
+
+    def step_round(self):
+        self._bookkeep()
+        return 0
+
+    def _bookkeep(self):
+        # BAD: per-round placement readback on the step_round path
+        active = np.asarray(self.lanes.active)
+        return active

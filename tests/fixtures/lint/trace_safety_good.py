@@ -1,0 +1,43 @@
+"""Known-good fixture: the same shapes as trace_safety_bad.py written
+the branchless/boundary way — the trace-safety rule must stay silent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel(x, y, tile: int, flip: bool = False):
+    y = jnp.where(x > 0, y + 1, y)           # branchless select
+    y = jax.lax.while_loop(lambda v: v > 0, lambda v: v - 1, y)
+    if tile > 8:                              # static param: fine
+        y = y * 2
+    if flip:                                  # literal-default param: fine
+        y = -y
+    if y.shape[0] > 1:                        # shape is static metadata
+        y = y.reshape(-1)
+    return y
+
+
+jitted = jax.jit(kernel)
+
+
+def host_boundary(fn, x):
+    """Host-side round boundary: syncs OUTSIDE the jitted region."""
+    out = fn(x)
+    return int(np.asarray(out).sum())         # not reachable from a jit
+
+
+class GoodDriver:
+    def __init__(self, lanes):
+        self.lanes = lanes
+        self._dirty = True
+
+    def step_round(self):
+        if self._dirty:
+            self._rebuild_mirror()
+        return 0
+
+    def _rebuild_mirror(self):
+        # Event-driven (dirty-flag guarded) readback of non-placement
+        # state only — nothing for the round-path clause to flag.
+        self._dirty = False
+        return np.asarray(self.lanes.nodes)

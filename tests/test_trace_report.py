@@ -1,0 +1,109 @@
+"""CLI-level tests for tools/trace_report.py: exit 0 on a clean trace,
+exit 2 on every reconciliation/schema failure the CI trace-smoke step
+gates on.  (test_obs.py covers analyze() programmatically; this file
+pins main()'s exit codes and stderr.)"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tools"))
+
+import trace_report  # noqa: E402  (tools/ is not a package)
+from repro.obs.trace import TRACE_SCHEMA_VERSION, TraceWriter  # noqa: E402
+
+
+def _write_trace(path, *, lane_nodes=(6, 4), inst_nodes=(10,), nodes=10,
+                 schema=TRACE_SCHEMA_VERSION, summary=True):
+    w = TraceWriter(str(path))
+    w.write("meta", schema=schema, mode="solve", lanes=len(lane_nodes),
+            slots=1)
+    w.write("round", round=0, open=3, active=2, nodes=nodes, steal_req=1,
+            steal_recv=1, donated=1, inst_nodes=list(inst_nodes))
+    if summary:
+        w.write("summary", rounds=1, nodes=nodes,
+                lane_nodes=list(lane_nodes), inst_nodes=list(inst_nodes))
+    w.close()
+    return str(path)
+
+
+def test_clean_trace_exits_zero(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl")
+    assert trace_report.main([trace]) == 0
+    out = capsys.readouterr().out
+    assert "trace report" in out
+    assert "nodes=10" in out
+
+
+def test_clean_trace_json_mode(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl")
+    assert trace_report.main([trace, "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["nodes"] == 10
+    assert report["lane_nodes"] == [6, 4]
+
+
+def test_lane_total_mismatch_exits_two(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl", lane_nodes=(6, 5))
+    assert trace_report.main([trace]) == 2
+    err = capsys.readouterr().err
+    assert "per-lane node totals sum to 11" in err
+
+
+def test_instance_total_mismatch_exits_two(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl", inst_nodes=(9,))
+    assert trace_report.main([trace]) == 2
+    assert "per-instance node totals sum to 9" in capsys.readouterr().err
+
+
+def test_missing_summary_exits_two(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl", summary=False)
+    assert trace_report.main([trace]) == 2
+    assert "no 'summary' record" in capsys.readouterr().err
+
+
+def test_schema_version_mismatch_exits_two(tmp_path, capsys):
+    trace = _write_trace(tmp_path / "t.jsonl",
+                         schema=TRACE_SCHEMA_VERSION + 1)
+    assert trace_report.main([trace]) == 2
+    assert "schema" in capsys.readouterr().err
+
+
+def test_malformed_record_exits_two(tmp_path, capsys):
+    path = tmp_path / "t.jsonl"
+    path.write_text('{"t":"warp","round":1}\n')
+    assert trace_report.main([str(path)]) == 2
+    assert "unknown trace record kind 'warp'" in capsys.readouterr().err
+
+
+def test_meta_not_first_exits_two(tmp_path, capsys):
+    path = tmp_path / "t.jsonl"
+    w = TraceWriter(str(path))
+    w.write("summary", rounds=0, nodes=0, lane_nodes=[0], inst_nodes=[0])
+    w.close()
+    assert trace_report.main([str(path)]) == 2
+    assert "first record must be 'meta'" in capsys.readouterr().err
+
+
+def test_empty_trace_exits_two(tmp_path, capsys):
+    path = tmp_path / "t.jsonl"
+    path.write_text("")
+    assert trace_report.main([str(path)]) == 2
+    assert "empty trace" in capsys.readouterr().err
+
+
+def test_missing_file_exits_two(tmp_path, capsys):
+    assert trace_report.main([str(tmp_path / "nope.jsonl")]) == 2
+    assert capsys.readouterr().err.startswith("trace_report:")
+
+
+@pytest.mark.parametrize("values,expected", [
+    ([5, 5, 5, 5], 0.0),
+    ([], 0.0),
+    ([0, 0, 0], 0.0),
+])
+def test_gini_degenerate_cases(values, expected):
+    assert trace_report.gini(values) == pytest.approx(expected)

@@ -33,7 +33,8 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
-MODULES = ("repro.registry", "repro.solver", "repro.service", "repro.obs")
+MODULES = ("repro.registry", "repro.solver", "repro.service", "repro.obs",
+           "repro.analysis")
 SNAPSHOT = pathlib.Path(__file__).resolve().parent / "api_surface.txt"
 
 
